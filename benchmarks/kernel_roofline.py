@@ -1,0 +1,125 @@
+"""Iteration C (§Perf): what the Pallas flash-attention kernel does to the
+roofline of an attention-heavy cell.
+
+Method (pure dry-run, no hardware):
+  1. lower the cell normally  -> full per-device costs (XLA chunked path);
+  2. lower with attention stubbed (flags.stub_attention) -> base costs;
+  3. attention-attributable costs = (1) − (2);
+  4. kernel-path attention costs from first principles + BlockSpec schedule
+     (kernels/flash_attention.schedule_props): q/k/v/o stream HBM once,
+     score tiles live in VMEM (priced at the VMEM weight, i.e. ~free on
+     the HBM roofline).
+
+    PYTHONPATH=src python -m benchmarks.kernel_roofline [arch] [shape]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.core import extract as cx
+from repro.distributed.plan import plan_for
+from repro.distributed.sharding import use_sharding
+from repro.kernels import flash_attention as fa
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import step_and_specs
+from repro.runtime import flags
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 3 * 50e9
+
+
+def _lower(cfg, shape, mesh, plan):
+    with mesh, use_sharding(mesh, plan):
+        fn, specs, sh, osh = step_and_specs(cfg, shape, mesh, plan)
+        compiled = jax.jit(fn, in_shardings=sh,
+                           out_shardings=osh).lower(*specs).compile()
+    return cx.extract_compiled(compiled)
+
+
+def analyse(arch: str = "glm4-9b", shape_name: str = "prefill_32k"):
+    cfg, shape = ARCHS[arch], SHAPES[shape_name]
+    mesh = make_production_mesh()
+    plan = plan_for(cfg, shape)
+    n_dev = mesh.devices.size
+
+    full = _lower(cfg, shape, mesh, plan)
+    with flags.stub_attention():
+        base = _lower(cfg, shape, mesh, plan)
+
+    attn_flops = max(full.flops - base.flops, 0.0)
+    attn_bytes = max(full.bytes_accessed - base.bytes_accessed, 0.0)
+
+    # ---- kernel path (per device) ----------------------------------------
+    B, S = shape.global_batch, shape.seq_len
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    n_attn = (cfg.n_layers // cfg.hybrid.attn_every
+              if cfg.family == "hybrid" else cfg.n_layers)
+    # fwd + flash bwd ≈ 3 kernel passes (bwd reads q,k,v,o,do; writes dq,dk,dv)
+    passes = 3.0 if shape.kind == "train" else 1.0
+    bytes_elem = 2  # bf16 streams
+    hbm_stream = (B * S * (2 * H + 4 * KVH) * dh * bytes_elem) * n_attn \
+        * passes / n_dev
+    props = fa.schedule_props(B, H, KVH, S, S, dh, causal=True,
+                              window=cfg.sliding_window)
+    kernel_flops = props["mxu:16"] * n_attn * (2.5 if shape.kind == "train"
+                                               else 1.0) / n_dev
+    vmem_bytes = props["local:16:load"] * 2 * n_attn * passes / n_dev
+    vmem_s = vmem_bytes / (20 * HBM)  # VMEM ≈ 20× HBM bandwidth
+
+    def terms(fl, by, coll):
+        return {"compute": fl / PEAK, "memory": by / HBM,
+                "collective": sum(coll.values()) / ICI}
+
+    t_xla = terms(full.flops, full.bytes_accessed, full.collective_bytes)
+    kern_total_flops = base.flops + kernel_flops
+    kern_total_bytes = base.bytes_accessed + hbm_stream
+    t_kernel = terms(kern_total_flops, kern_total_bytes,
+                     full.collective_bytes)
+    t_kernel["vmem"] = vmem_s
+
+    out = {
+        "arch": arch, "shape": shape_name, "n_devices": int(n_dev),
+        "attention_attributable": {"flops": attn_flops, "bytes": attn_bytes},
+        "kernel_attention": {"flops": kernel_flops,
+                             "hbm_bytes": hbm_stream,
+                             "vmem_bytes": vmem_bytes},
+        "xla_terms_s": t_xla,
+        "kernel_terms_s": t_kernel,
+        "xla_dominant": max(t_xla, key=t_xla.get),
+        "kernel_dominant": max(t_kernel, key=t_kernel.get),
+        "memory_term_reduction":
+            (t_xla["memory"] - t_kernel["memory"]) / t_xla["memory"]
+            if t_xla["memory"] else 0.0,
+        "step_bound_xla_s": max(t_xla.values()),
+        "step_bound_kernel_s": max(t_kernel.values()),
+    }
+    print(json.dumps(out, indent=1))
+    print(f"\nXLA path   : compute {t_xla['compute']*1e3:9.1f} ms | "
+          f"memory {t_xla['memory']*1e3:9.1f} ms | "
+          f"coll {t_xla['collective']*1e3:7.1f} ms  "
+          f"-> bound {out['step_bound_xla_s']*1e3:.1f} ms ({out['xla_dominant']})")
+    print(f"kernel path: compute {t_kernel['compute']*1e3:9.1f} ms | "
+          f"memory {t_kernel['memory']*1e3:9.1f} ms | "
+          f"coll {t_kernel['collective']*1e3:7.1f} ms | "
+          f"vmem {vmem_s*1e3:7.1f} ms "
+          f"-> bound {out['step_bound_kernel_s']*1e3:.1f} ms "
+          f"({out['kernel_dominant']})")
+    print(f"memory-term reduction: {out['memory_term_reduction']:.1%}; "
+          f"step bound {out['step_bound_xla_s']/out['step_bound_kernel_s']:.2f}× better")
+    os.makedirs("experiments", exist_ok=True)
+    with open(f"experiments/kernel_roofline_{arch}_{shape_name}.json",
+              "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    analyse(*(sys.argv[1:] or []))

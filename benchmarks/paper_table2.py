@@ -1,0 +1,47 @@
+"""Paper Table 2 — the fitted weights, interpreted.
+
+Prints the per-property weights (seconds/event) for the device fitted by
+paper_table1, sorted by |weight|·typical-count salience, next to the
+TPU-v5e analytic seed weights — the paper's point that weights 'allow
+direct conclusions about sustained typical rates … and are directly
+comparable across devices'.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import predictor
+from repro.core.model import LinearCostModel
+
+OUT_DIR = "experiments"
+
+
+def main(scale: str = "cpu") -> None:
+    path = os.path.join(OUT_DIR, f"model_cpu_{scale}.json")
+    if not os.path.exists(path):
+        from benchmarks import paper_table1
+        paper_table1.run(scale=scale)
+    cpu = LinearCostModel.load(path)
+    tpu = predictor.tpu_v5e_weights()
+
+    print(cpu.interpretation_report())
+    print()
+
+    # rate interpretation: seconds/event -> sustained rate
+    print(f"{'property':<44} {'cpu fit':>12} {'v5e seed':>12}")
+    tpu_w = dict(zip(tpu.keys, tpu.weights))
+    for k, w in sorted(zip(cpu.keys, cpu.weights), key=lambda kw: -abs(kw[1])):
+        tv = tpu_w.get(k)
+        print(f"{k:<44} {w:12.3e} "
+              f"{tv if tv is None else format(tv, '12.3e')}")
+
+    with open(os.path.join(OUT_DIR, "paper_table2.json"), "w") as f:
+        json.dump({"cpu": dict(zip(cpu.keys, map(float, cpu.weights))),
+                   "tpu_v5e_seed": {k: float(v) for k, v in tpu_w.items()}},
+                  f, indent=1)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "cpu")

@@ -1,0 +1,113 @@
+"""Beyond-paper validation: whole-TRAINING-STEP time prediction on the CPU
+device.
+
+The paper predicts single GPU kernels; our framework extends the same
+linear machinery to whole distributed training steps.  This benchmark
+closes the loop on the runtime device we actually have: for each reduced
+architecture, predict the step time from automatically-extracted jaxpr
+properties using the *measurement-kernel-fitted* CPU model (no step-level
+refit!), then measure, and report the geomean relative error — i.e. the
+fitted weights transfer from micro-kernels to full model steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.core import extract, measure
+from repro.core.model import LinearCostModel, geomean, relative_error
+from repro.models import transformer
+from repro.optim import optimizers as opt
+from repro.runtime import steps
+
+OUT_DIR = "experiments"
+
+
+def _batch(cfg, B, S, key):
+    k1, k2 = jax.random.split(key)
+    shp = (B, S, cfg.n_input_codebooks) if cfg.n_input_codebooks > 1 else (B, S)
+    b = {"tokens": jax.random.randint(k1, shp, 0, cfg.vocab_size, jnp.int32),
+         "labels": jax.random.randint(k2, shp, 0, cfg.vocab_size, jnp.int32)}
+    if cfg.vision_tokens:
+        b["vision_embeds"] = jnp.ones((B, cfg.vision_tokens, cfg.d_model),
+                                      jnp.bfloat16) * 0.01
+        b["loss_mask"] = jnp.ones((B, S), jnp.float32)
+    return b
+
+
+def run(scale: str = "cpu", B: int = 4, S: int = 512,
+        verbose: bool = True) -> Dict:
+    path = os.path.join(OUT_DIR, f"model_cpu_{scale}.json")
+    if not os.path.exists(path):
+        from benchmarks import paper_table1
+        paper_table1.run(scale=scale, verbose=False)
+    model = LinearCostModel.load(path)
+
+    rows = []
+    for name in sorted(ARCHS):
+        cfg = ARCHS[name].reduced()
+        optimizer = opt.get_optimizer("adamw")
+        params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        state = steps.TrainState(params, optimizer.init(params),
+                                 jnp.zeros((), jnp.int32))
+        batch = _batch(cfg, B, S, jax.random.PRNGKey(1))
+        step_fn = steps.make_train_step(cfg, optimizer)
+
+        pv = extract.extract_jaxpr(step_fn, state, batch)
+        pred = model.predict(pv)
+
+        jitted = jax.jit(step_fn)
+        tr = measure.time_kernel(lambda: jitted(state, batch),
+                                 runs=8, drop=2)
+        err = relative_error(pred, tr.min_s)
+        rows.append({"arch": name, "predicted_ms": pred * 1e3,
+                     "actual_ms": tr.min_s * 1e3, "rel_err": err})
+        if verbose:
+            r = rows[-1]
+            print(f"{name:<18} pred={r['predicted_ms']:9.2f}ms "
+                  f"act={r['actual_ms']:9.2f}ms err={err:.2f}")
+
+    g = geomean(r["rel_err"] for r in rows)
+
+    # One-point calibration: micro-kernel weights systematically under-
+    # price XLA-CPU's per-op materialization on ~2000-op whole steps, but
+    # the UNDER-PRICING IS UNIFORM — so a single whole-step measurement
+    # (smollm, the smallest arch) calibrates all others.  This is the
+    # quantity the framework actually consumes (plan ranking, straggler
+    # thresholds are relative).
+    cal_row = next(r for r in rows if r["arch"] == "smollm-360m")
+    k = cal_row["actual_ms"] / cal_row["predicted_ms"]
+    cal_errs = []
+    for r in rows:
+        if r["arch"] == cal_row["arch"]:
+            continue
+        r["calibrated_ms"] = r["predicted_ms"] * k
+        r["cal_rel_err"] = relative_error(r["calibrated_ms"],
+                                          r["actual_ms"])
+        cal_errs.append(r["cal_rel_err"])
+    g_cal = geomean(cal_errs)
+    if verbose:
+        print(f"\nwhole-step geomean rel |err| over {len(rows)} archs: "
+              f"{g:.3f} raw; {g_cal:.3f} after ONE-POINT calibration "
+              f"(factor {k:.1f}x from smollm)")
+    out = {"rows": rows, "geomean_rel_err": g,
+           "geomean_rel_err_calibrated": g_cal,
+           "calibration_factor": k, "B": B, "S": S}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "predictor_validation.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main(scale: str = "cpu") -> None:
+    run(scale=scale)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "cpu")

@@ -1,0 +1,98 @@
+"""Roofline analysis (deliverable g): the three-term table per
+(architecture × shape), derived from the compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs  / (chips × 197e12)          [bf16 peak]
+    memory     = HLO_bytes  / (chips × 819e9)           [HBM]
+    collective = coll_bytes / (chips × 3·50e9)          [ICI links]
+
+``dryrun.json`` records *per-device* flops/bytes of the SPMD-partitioned
+module, so chips cancel: term = per_device_quantity / per_chip_rate.
+MODEL_FLOPS is the 6·N·D / 2·N_active·D closed form from ``archcount``;
+the MODEL/HLO ratio flags remat- or redundancy-driven waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.core import archcount
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 3 * 50e9   # ~3 usable links per axis-direction on the 2D torus
+OUT_DIR = "experiments"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    sc = archcount.counts_for(cfg, shape.kind)
+    return sc.concrete_model_flops(
+        {"B": shape.global_batch, "S": shape.seq_len})
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    compute = rec["flops_per_device"] / PEAK
+    memory = rec["bytes_per_device"] / HBM
+    coll = sum(rec["collective_bytes_per_device"].values()) / ICI
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["flops_per_device"] * n
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        # roofline fraction: dominant-term time / additive-model time —
+        # 1.0 means perfectly overlapped (the dominant term IS the step)
+        "roofline_fraction": bound / total if total else 0.0,
+        "step_bound_s": bound,
+    }
+
+
+def main(path: str = "experiments/dryrun.json",
+         mesh: str = "16x16") -> List[Dict]:
+    with open(path) as f:
+        records = json.load(f)
+    rows, skips = [], []
+    for rec in records:
+        if rec["mesh"] != mesh:
+            continue
+        if rec["status"] == "skip":
+            skips.append(rec)
+            continue
+        r = analyse(rec)
+        if r:
+            rows.append(r)
+
+    hdr = (f"{'arch':<17}{'shape':<13}{'compute':>10}{'memory':>10}"
+           f"{'collect':>10}{'dominant':>11}{'useful':>8}{'roofl%':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(f"{r['arch']:<17}{r['shape']:<13}"
+              f"{r['compute_s']*1e3:9.2f}m{r['memory_s']*1e3:9.2f}m"
+              f"{r['collective_s']*1e3:9.2f}m{r['dominant']:>11}"
+              f"{r['useful_ratio']:8.2f}{r['roofline_fraction']*100:7.1f}%")
+    for s in skips:
+        print(f"{s['arch']:<17}{s['shape']:<13}{s['why']}")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"roofline_{mesh}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one module per paper table/figure + the
+framework-level analyses.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale cpu|tiny] [--only NAME]
+
+  paper_table1          paper §5 Table 1 (fit + held-out test kernels)
+  paper_table2          paper Table 2 (fitted weights, interpreted)
+  predictor_validation  beyond-paper: whole-step CPU prediction
+  roofline              40-cell roofline table from experiments/dryrun.json
+                        (run `python -m repro.launch.dryrun` first; skipped
+                        with a notice if the dry-run artifact is absent)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="cpu", choices=("cpu", "tiny"),
+                    help="measurement-kernel problem-size ladder")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    names = [args.only] if args.only else [
+        "paper_table1", "paper_table2", "predictor_validation", "roofline"]
+
+    for name in names:
+        print(f"\n{'='*72}\n== benchmarks.{name}\n{'='*72}")
+        if name == "paper_table1":
+            from benchmarks import paper_table1
+            paper_table1.main(args.scale)
+        elif name == "paper_table2":
+            from benchmarks import paper_table2
+            paper_table2.main(args.scale)
+        elif name == "predictor_validation":
+            from benchmarks import predictor_validation
+            predictor_validation.main(args.scale)
+        elif name == "roofline":
+            from benchmarks import roofline
+            if os.path.exists("experiments/dryrun.json"):
+                for mesh in ("16x16", "2x16x16"):
+                    print(f"\n-- mesh {mesh} --")
+                    roofline.main("experiments/dryrun.json", mesh)
+            else:
+                print("experiments/dryrun.json not found — run "
+                      "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        else:
+            print(f"unknown benchmark {name!r}", file=sys.stderr)
+            sys.exit(2)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

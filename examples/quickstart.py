@@ -1,0 +1,51 @@
+"""Quickstart: fit the paper's linear cost model on THIS machine and
+predict a held-out kernel — the whole pipeline in one minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import extract, fit, measure, mkernels
+
+
+def main():
+    # 1. measurement library (tiny ladder for the quickstart) ------------
+    cases = mkernels.measurement_cases("tiny")
+    print(f"measuring {len(cases)} kernels (paper §4.1 library, tiny scale)…")
+    pvs, times = [], []
+    for c in cases:
+        pvs.append(c.properties())          # automatic extraction (§3)
+        times.append(measure.time_kernel(c.jitted(), runs=10, drop=2).min_s)
+
+    # 2. black-box fit (§4.3) --------------------------------------------
+    model = fit.fit_relative(pvs, times, device="quickstart-cpu", ridge=1e-4)
+    rep = fit.fit_report(model, pvs, times)
+    print(f"fit geomean rel err on the library: {rep['geomean_rel_err']:.2%}")
+
+    # 3. predict a kernel the fit never saw -------------------------------
+    n = 384
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (n, n))
+
+    def my_kernel(a):                       # fused polynomial + matmul
+        b = a @ a
+        return b * a + jnp.exp(-a)
+
+    pv = extract.extract_jaxpr(my_kernel, a)   # symbolic -> concrete counts
+    predicted = model.predict(pv)              # <alpha, p> inner product
+    jitted = jax.jit(my_kernel)
+    actual = measure.time_kernel(lambda: jitted(a), runs=10, drop=2).min_s
+    print(f"\nheld-out kernel ({n}x{n} matmul+pointwise):")
+    print(f"  predicted {predicted*1e3:7.3f} ms")
+    print(f"  actual    {actual*1e3:7.3f} ms")
+    print(f"  rel err   {abs(predicted-actual)/actual:7.2%}")
+
+    # 4. what the time is made of (Table-2-style attribution) ------------
+    print("\ncost attribution:")
+    for k, v in list(model.breakdown(pv).items())[:5]:
+        print(f"  {k:<20} {v*1e6:8.1f} µs")
+
+
+if __name__ == "__main__":
+    main()

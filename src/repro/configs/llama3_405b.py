@@ -1,0 +1,21 @@
+"""Llama-3-405B [arXiv:2407.21783] — GQA kv=8, 128k vocab.
+
+Trains with Adafactor + full remat: fp32 Adam m/v would need ~22 GB/chip on a
+256-chip v5e pod (16 GB HBM) — see DESIGN.md §2 and EXPERIMENTS.md §Dry-run.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+    optimizer="adafactor",
+    remat_policy="full",
+)

@@ -1,0 +1,115 @@
+"""Weight fitting — paper §4.3.
+
+The paper minimizes *relative* squared error
+
+    Σ_j (1 − Σ_i α_i p_ij / T_j)²,
+
+which is ordinary least squares on the property matrix with row j scaled by
+1/T_j and unit targets.  We solve it with numpy lstsq; a small ridge term is
+available (useful when the runtime device collapses rate distinctions the
+taxonomy keeps separate — e.g. a CPU has no coalescing cliff, so stride
+columns become near-collinear; see EXPERIMENTS.md §Paper), as is projected
+non-negative refinement (the paper's fitted weights may legitimately be
+negative — Table 2 has negative local-load and min(L,S) entries — so NNLS
+is *off* by default).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import properties as props
+from repro.core.model import LinearCostModel
+
+
+def fit_relative(pvs: Sequence[Mapping[str, float]],
+                 times: Sequence[float],
+                 device: str = "unknown",
+                 ridge: float = 0.0,
+                 nonneg: bool = False,
+                 keys: Optional[List[str]] = None) -> LinearCostModel:
+    """Fit α minimizing Σ_j (1 − <α, p_j>/T_j)²  (+ ridge ‖D α‖²).
+
+    The ridge penalty is scaled per column by the column norm of the
+    T-normalized design matrix, so regularization strength is unit-free.
+    """
+    assert len(pvs) == len(times) and len(pvs) > 0
+    keys = keys or props.union_keys(pvs)
+    A = props.to_matrix(list(pvs), keys)  # (J, I)
+    T = np.asarray(list(times), dtype=np.float64)
+    assert np.all(T > 0), "non-positive measured times"
+    An = A / T[:, None]  # row scaling by 1/T_j
+    b = np.ones(len(T))
+
+    if ridge > 0.0:
+        col = np.linalg.norm(An, axis=0)
+        col = np.where(col > 0, col, 1.0)
+        R = np.diag(np.sqrt(ridge) * col)
+        An = np.vstack([An, R])
+        b = np.concatenate([b, np.zeros(len(keys))])
+
+    w, *_ = np.linalg.lstsq(An, b, rcond=None)
+
+    if nonneg:
+        w = _nnls_projected(An, b, w)
+
+    model = LinearCostModel(keys=keys, weights=w, device=device,
+                            meta={"ridge": ridge, "nonneg": nonneg,
+                                  "n_measurements": len(T)})
+    return model
+
+
+def _nnls_projected(A: np.ndarray, b: np.ndarray, w0: np.ndarray,
+                    iters: int = 2000, tol: float = 1e-14) -> np.ndarray:
+    """Projected-gradient NNLS refinement (scipy-free)."""
+    L = np.linalg.norm(A, 2) ** 2
+    if L == 0:
+        return np.maximum(w0, 0.0)
+    step = 1.0 / L
+    w = np.maximum(w0, 0.0)
+    AtA, Atb = A.T @ A, A.T @ b
+    last = np.inf
+    for _ in range(iters):
+        g = AtA @ w - Atb
+        w = np.maximum(w - step * g, 0.0)
+        f = 0.5 * w @ AtA @ w - Atb @ w
+        if abs(last - f) < tol * max(abs(f), 1.0):
+            break
+        last = f
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Fit diagnostics
+# ---------------------------------------------------------------------------
+
+
+def fit_report(model: LinearCostModel, pvs: Sequence[Mapping[str, float]],
+               times: Sequence[float],
+               labels: Optional[Sequence[str]] = None) -> Dict[str, object]:
+    """Per-kernel relative errors + geomean (paper Table 1 bottom row)."""
+    from repro.core.model import geomean, relative_error
+    preds = model.predict_many(list(pvs))
+    errs = [relative_error(p, t) for p, t in zip(preds, times)]
+    rows = []
+    for i, (p, t, e) in enumerate(zip(preds, times, errs)):
+        rows.append({
+            "label": labels[i] if labels else str(i),
+            "predicted_s": float(p), "actual_s": float(t),
+            "rel_err": float(e),
+        })
+    return {"rows": rows, "geomean_rel_err": geomean(errs),
+            "max_rel_err": float(max(errs)), "n": len(errs)}
+
+
+def condition_report(pvs: Sequence[Mapping[str, float]],
+                     times: Sequence[float]) -> Dict[str, float]:
+    """Design-matrix conditioning of the T-normalized system."""
+    keys = props.union_keys(pvs)
+    A = props.to_matrix(list(pvs), keys) / np.asarray(times)[:, None]
+    s = np.linalg.svd(A, compute_uv=False)
+    s = s[s > 0]
+    return {"n_rows": A.shape[0], "n_cols": A.shape[1],
+            "rank": int(np.linalg.matrix_rank(A)),
+            "cond": float(s[0] / s[-1]) if len(s) else float("inf")}

@@ -1,0 +1,360 @@
+"""The measurement-kernel library — paper §4.1 (9 classes).
+
+Each class yields several ``KernelCase``s (shape × size sweep).  Property
+vectors are extracted *automatically* from the jaxpr (``core.extract``);
+tiled kernels additionally declare their schedule-derived properties
+(local-memory loads, barriers, group counts, tile re-reads) through the
+``tiled_*_props`` helpers — the analog of the paper needing the Loopy
+*schedule* to count barriers (§3.2).
+
+Problem sizes follow the paper's 2^{p+t} ladders, with ``p`` chosen for the
+runtime device (the container CPU here) the same way the paper chose p per
+GPU: large enough to exceed launch overhead, small enough to fit memory and
+a sane wall-clock budget.
+
+The kernels express the *algorithm the GPU kernel would run* (strides,
+tiling) in pure jnp; XLA-CPU may compile them differently, but the model is
+fitted to *this device's* sustained rates for each property — which is
+precisely the paper's black-box premise.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import extract
+from repro.core import properties as props
+
+GSIZE = 16           # 2-D tile edge (16×16 = 256-lane groups, paper's 2-D Med)
+GROUP_1D = 256       # 1-D group size
+
+
+@dataclass
+class KernelCase:
+    name: str
+    klass: str                     # measurement class id
+    fn: Callable                   # python function (pre-jit)
+    args: Tuple                    # staged inputs
+    extra_props: Dict[str, float] = field(default_factory=dict)
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    _pv: Optional[Dict[str, float]] = None
+    _jitted: Optional[Callable] = None
+
+    def properties(self) -> Dict[str, float]:
+        if self._pv is None:
+            pv = extract.extract_jaxpr(self.fn, *self.args,
+                                       extra_props=self.extra_props)
+            if props.GROUPS in self.extra_props:
+                # explicit schedule-declared group count replaces the nominal
+                pv[props.GROUPS] = self.extra_props[props.GROUPS]
+            self._pv = pv
+        return self._pv
+
+    def jitted(self) -> Callable:
+        if self._jitted is None:
+            j = jax.jit(self.fn)
+            self._jitted = lambda: j(*self.args)
+        return self._jitted
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, 0.1, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-derived property helpers (tiling visible only to the scheduler)
+# ---------------------------------------------------------------------------
+
+
+def tiled_mm_props(n: int, m: int, l: int, gs: int = GSIZE) -> Dict[str, float]:
+    """GPU tiled matmul: each (i,j) group re-fetches its A-row / B-col tiles.
+
+    Global loads beyond the single jaxpr-visible read:
+      A is read l/gs times, B n/gs times (s1, coalesced tile rows).
+    Local loads: every MAC reads its 2 operands from the tile in local
+    memory: 2·n·l·m.  Barriers: one per k-step per group = (m/gs)·(n·l/gs²).
+    """
+    groups = (n // gs) * (l // gs)
+    extra_a = n * m * (l // gs - 1)
+    extra_b = m * l * (n // gs - 1)
+    return {
+        props.mem_key("load", 32, "s1"): float(max(extra_a, 0) + max(extra_b, 0)),
+        props.local_key(32): 2.0 * n * l * m,
+        props.BARRIER: float((m // gs) * groups),
+        props.GROUPS: float(groups),
+    }
+
+
+def tiled_transpose_props(n: int, gs: int = GSIZE) -> Dict[str, float]:
+    """Prefetched transpose: tile in (s1 read), barrier, tile out (s1 write).
+    Each element passes through local memory once."""
+    groups = (n // gs) ** 2
+    return {
+        props.local_key(32): float(n * n),
+        props.BARRIER: float(groups),
+        props.GROUPS: float(groups),
+    }
+
+
+def stencil_tile_props(n: int, gs: int = GSIZE, halo: int = 1) -> Dict[str, float]:
+    """FD tile prefetch: interior + halo cells per tile; 5 local reads/cell."""
+    tiles = (n // gs) ** 2
+    halo_cells = float(tiles * (4 * gs * halo + 4 * halo * halo))
+    return {
+        props.mem_key("load", 32, "s1"): halo_cells,  # halo re-reads
+        props.local_key(32): 5.0 * n * n,
+        props.BARRIER: float(tiles),
+        props.GROUPS: float(tiles),
+    }
+
+
+def nbody_tile_props(n: int, gs: int = GROUP_1D) -> Dict[str, float]:
+    """N-body: position blocks are prefetched (3×gs) per group per block;
+    every pair interaction reads 3 coords from local memory."""
+    groups = n // gs
+    return {
+        props.mem_key("load", 32, "s1"): float(3 * n * (groups - 1)),
+        props.local_key(32): float(3 * n * n),
+        props.BARRIER: float(groups * (n // gs)),
+        props.GROUPS: float(groups),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 1+2. Matrix multiplication (tiled + naive)
+# ---------------------------------------------------------------------------
+
+
+def _mm_cases(tiled: bool, p: int, key) -> List[KernelCase]:
+    cases = []
+    shapes = []
+    for t in range(4):
+        n = 2 ** (p + t)
+        shapes += [(n, n, n), (n, n, n // 2), (n, n // 2, n), (n // 2, n, n)]
+    if not tiled:  # naive: square only (paper)
+        shapes = [(2 ** (p + t),) * 3 for t in range(4)]
+    for i, (n, m, l) in enumerate(shapes):
+        k1, k2, key = jax.random.split(key, 3)
+        a = _rand(k1, (n, m))
+        b = _rand(k2, (m, l))
+        extra = tiled_mm_props(n, m, l) if tiled else {}
+        klass = "mm_tiled" if tiled else "mm_naive"
+        cases.append(KernelCase(
+            name=f"{klass}_{n}x{m}x{l}", klass=klass,
+            fn=lambda a, b: a @ b, args=(a, b), extra_props=extra,
+            meta={"n": n, "m": m, "l": l}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# 3. Vector scale and add (strides 1/2/3)
+# ---------------------------------------------------------------------------
+
+
+def _vsa_cases(p: int, key) -> List[KernelCase]:
+    cases = []
+    for stride in (1, 2, 3):
+        for t in range(4):
+            n = 2 ** (p + 2 * t)
+            k1, k2, key = jax.random.split(key, 3)
+            a = _rand(k1, (n * stride,))
+            b = _rand(k2, (n * stride,))
+            lim = n * stride
+
+            def fn(a, b, s=stride, lim=lim):
+                return 2.5 * jax.lax.slice(a, (0,), (lim,), (s,)) \
+                    + 1.5 * jax.lax.slice(b, (0,), (lim,), (s,))
+
+            cases.append(KernelCase(
+                name=f"vsa_s{stride}_n{n}", klass="vector_scale_add",
+                fn=fn, args=(a, b), meta={"n": n, "stride": stride}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# 4. Transpose (3 variants)
+# ---------------------------------------------------------------------------
+
+
+def _transpose_cases(p: int, key) -> List[KernelCase]:
+    cases = []
+    for t in range(4):
+        n = 2 ** (p + t)
+        k1, key = jax.random.split(key)
+        x = _rand(k1, (n, n))
+
+        # v1: prefetch-tiled (s1 reads AND writes; local memory round-trip)
+        cases.append(KernelCase(
+            name=f"transpose_tiled_{n}", klass="transpose",
+            fn=lambda x: x.T + 0.0, args=(x,),
+            extra_props={
+                **tiled_transpose_props(n),
+                # the tile pass converts the gather-read into s1 read+write
+                props.mem_key("load", 32, "s1"): float(n * n),
+                props.mem_key("load", 32, "gather"): -float(n * n),
+            },
+            meta={"n": n, "variant": "tiled"}))
+
+        # v2: no prefetch — s1 writes, uncoalesced reads
+        cases.append(KernelCase(
+            name=f"transpose_plain_{n}", klass="transpose",
+            fn=lambda x: x.T + 0.0, args=(x,), meta={"n": n, "variant": "plain"}))
+
+        # v3: no prefetch — s1 reads, uncoalesced (scatter) writes
+        def scat(x, n=n):
+            i = jnp.arange(n * n)
+            dest = (i % n) * n + i // n
+            return jnp.zeros((n * n,), x.dtype).at[dest].set(x.reshape(-1))
+
+        cases.append(KernelCase(
+            name=f"transpose_scatter_{n}", klass="transpose",
+            fn=scat, args=(x,), meta={"n": n, "variant": "scatter"}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# 5. Stride-1 global access (copy / 4-add / index store)
+# ---------------------------------------------------------------------------
+
+
+def _stride1_cases(p: int, key) -> List[KernelCase]:
+    cases = []
+    for t in range(0, 9, 2):  # 5 of the paper's 9 ladder points
+        n = 2 ** (p + t)
+        ks = jax.random.split(key, 6)
+        key = ks[5]
+        arrs = [_rand(ks[i], (n,)) for i in range(5)]
+        cases.append(KernelCase(
+            name=f"s1_copy_{n}", klass="stride1_global",
+            fn=lambda a: a + 0.0, args=(arrs[0],), meta={"n": n}))
+        cases.append(KernelCase(
+            name=f"s1_add4_{n}", klass="stride1_global",
+            fn=lambda a, b, c, d: a + b + c + d,
+            args=tuple(arrs[:4]), meta={"n": n}))
+        cases.append(KernelCase(
+            name=f"s1_store_iota_{n}", klass="stride1_global",
+            fn=lambda n=n: jnp.arange(n, dtype=jnp.float32) + 0.0,
+            args=(), meta={"n": n}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# 6+7. Stride-2 / stride-3 *filled* access (all phases touched)
+# ---------------------------------------------------------------------------
+
+
+def _filled_cases(stride: int, p: int, key) -> List[KernelCase]:
+    cases = []
+    R = 256  # pair-sums reduced per output element (paper's 256)
+    for t in range(3):
+        n = 2 ** (p + t)
+        k1, key = jax.random.split(key)
+        a = _rand(k1, (stride * n,))
+
+        def fn(a, s=stride, n=n):
+            phases = [jax.lax.slice(a, (i,), (i + s * n - s + 1,), (s,))
+                      for i in range(s)]
+            ps = sum(phases)  # pairwise/trio-wise sums (n,)
+            return ps.reshape(n // R, R).sum(axis=1)
+
+        cases.append(KernelCase(
+            name=f"filled_s{stride}_n{n}", klass=f"stride{stride}_filled",
+            fn=fn, args=(a,), meta={"n": n, "stride": stride}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# 8. Arithmetic operations (per kind, no global reads)
+# ---------------------------------------------------------------------------
+
+
+_ARITH_EXPRS = {
+    # each body applies 6-10 ops of one kind to the lane value (paper §4.1)
+    "add": lambda x, q: x + q + 1.0 + (x - 2.0) + (q - x) + (x + 0.5) + q,
+    "mul": lambda x, q: x * q * 1.01 * (x * 0.99) * (q * 1.02) * (x * 0.5),
+    "div": lambda x, q: ((((x / (q + 1.0)) / 1.01) / (x + 2.0)) / 0.99) / 1.5,
+    "exp": lambda x, q: jnp.exp(-x) + jnp.exp(-q) + jnp.exp(-(x + q) * 0.5),
+    "rsqrt": lambda x, q: (jax.lax.rsqrt(x + 1.0) + jax.lax.rsqrt(q + 2.0)
+                           + jax.lax.rsqrt(x + q + 3.0)),
+}
+
+
+def _arith_cases(p: int, key) -> List[KernelCase]:
+    cases = []
+    for kind, body in _ARITH_EXPRS.items():
+        for t in range(3):
+            n = 2 ** (p + t)
+            k_red = 64  # reduction length (paper: 256..728; CPU-scaled)
+
+            def fn(kind=kind, n=n, k_red=k_red):
+                base = (jnp.arange(n * n, dtype=jnp.float32)
+                        .reshape(n, n) * 1e-6 + 0.5)
+
+                def step(acc, q):
+                    return acc + _ARITH_EXPRS[kind](base, q), None
+
+                acc, _ = jax.lax.scan(
+                    step, jnp.zeros((n, n), jnp.float32),
+                    jnp.arange(k_red, dtype=jnp.float32) * 1e-3 + 0.25)
+                return acc
+
+            cases.append(KernelCase(
+                name=f"arith_{kind}_n{n}", klass="arith",
+                fn=fn, args=(), meta={"n": n, "kind": kind, "k": k_red}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# 9. Empty kernel (launch overhead)
+# ---------------------------------------------------------------------------
+
+
+def _empty_cases(p: int) -> List[KernelCase]:
+    cases = []
+    for t in range(0, 6, 2):
+        n = 2 ** (p + t)
+        groups = (n // GSIZE) ** 2
+        cases.append(KernelCase(
+            name=f"empty_{n}", klass="empty",
+            fn=lambda: jnp.zeros((), jnp.float32), args=(),
+            extra_props={props.GROUPS: float(groups)},
+            meta={"n": n}))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# Assembly
+# ---------------------------------------------------------------------------
+
+# p-ladders per device scale; 'cpu' sizes target 1–50 ms/kernel on the
+# container CPU (the paper's per-GPU p choice, same role)
+_P = {
+    "cpu":  {"mm": 7, "naive": 7, "vsa": 16, "transpose": 9, "s1": 14,
+             "filled": 15, "arith": 7, "empty": 8},
+    "tiny": {"mm": 5, "naive": 5, "vsa": 8, "transpose": 6, "s1": 8,
+             "filled": 10, "arith": 4, "empty": 6},
+}
+
+
+def measurement_cases(scale: str = "cpu", seed: int = 0) -> List[KernelCase]:
+    P = _P[scale]
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    cases: List[KernelCase] = []
+    cases += _mm_cases(True, P["mm"], ks[0])
+    cases += _mm_cases(False, P["naive"], ks[1])
+    cases += _vsa_cases(P["vsa"], ks[2])
+    cases += _transpose_cases(P["transpose"], ks[3])
+    cases += _stride1_cases(P["s1"], ks[4])
+    cases += _filled_cases(2, P["filled"], ks[5])
+    cases += _filled_cases(3, P["filled"], ks[6])
+    cases += _arith_cases(P["arith"], ks[7])
+    cases += _empty_cases(P["empty"])
+    return cases

@@ -1,0 +1,93 @@
+"""The linear cost model — paper §2:  T_wall(n) ≈ Σ_i α_i · p_i(n).
+
+A ``LinearCostModel`` is just (ordered property names, weights α, metadata).
+Prediction is the small inner product the paper advertises; weights carry
+units of seconds/event and are directly interpretable (Table 2 analog via
+``interpretation_report``).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
+
+from repro.core import properties as props
+
+
+@dataclass
+class LinearCostModel:
+    keys: List[str]
+    weights: np.ndarray  # (len(keys),) seconds per event
+    device: str = "unknown"
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def predict(self, pv: Mapping[str, float]) -> float:
+        """<α, p> — evaluation is a small inner product (paper §1, item 5)."""
+        t = 0.0
+        for k, w in zip(self.keys, self.weights):
+            v = pv.get(k)
+            if v:
+                t += w * v
+        return float(t)
+
+    def predict_many(self, pvs: List[Mapping[str, float]]) -> np.ndarray:
+        A = props.to_matrix(pvs, self.keys)
+        return A @ self.weights
+
+    def breakdown(self, pv: Mapping[str, float]) -> Dict[str, float]:
+        """Per-property contribution in seconds (cost attribution)."""
+        out = {}
+        for k, w in zip(self.keys, self.weights):
+            v = pv.get(k)
+            if v:
+                out[k] = float(w * v)
+        return dict(sorted(out.items(), key=lambda kv: -abs(kv[1])))
+
+    # ------------------------------------------------------------------
+    def interpretation_report(self) -> str:
+        """Table-2 analog: weight per property, seconds/operation."""
+        lines = [f"# fitted weights — device: {self.device}",
+                 f"{'property':<44} {'weight (s/event)':>16}"]
+        for k, w in sorted(zip(self.keys, self.weights),
+                           key=lambda kw: -abs(kw[1])):
+            lines.append(f"{props.pretty(k):<44} {w: .3e}")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({
+                "device": self.device,
+                "keys": self.keys,
+                "weights": [float(w) for w in self.weights],
+                "meta": self.meta,
+            }, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "LinearCostModel":
+        with open(path) as f:
+            d = json.load(f)
+        return cls(keys=d["keys"], weights=np.asarray(d["weights"]),
+                   device=d.get("device", "unknown"), meta=d.get("meta", {}))
+
+    @classmethod
+    def from_dict(cls, weights: Mapping[str, float], device: str = "analytic",
+                  meta: Optional[dict] = None) -> "LinearCostModel":
+        keys = sorted(weights)
+        return cls(keys=keys, weights=np.asarray([weights[k] for k in keys]),
+                   device=device, meta=meta or {})
+
+
+def relative_error(pred: float, actual: float) -> float:
+    """|pred - actual| / actual — the paper's §5 error metric."""
+    return abs(pred - actual) / actual
+
+
+def geomean(xs) -> float:
+    """Geometric mean — Fleming & Wallace summary of normalized values."""
+    xs = np.asarray(list(xs), dtype=np.float64)
+    xs = np.maximum(xs, 1e-12)
+    return float(np.exp(np.mean(np.log(xs))))

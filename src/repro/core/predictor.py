@@ -1,0 +1,207 @@
+"""Step-time prediction for (arch × shape × mesh × plan) — the framework's
+first-class use of the paper's fitted linear model.
+
+Two weight sources:
+
+  * a **fitted** ``LinearCostModel`` (e.g. the CPU model produced by
+    ``benchmarks/paper_table1.py``, or a model fitted on real TPU timings
+    by the same black-box procedure);
+  * the **analytic v5e seed** (``tpu_v5e_weights``): weights seeded from
+    datasheet rates (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI) —
+    the starting point the black-box fit would refine on real hardware.
+
+The prediction is the paper's inner product <α, p>, with compute/memory
+properties scaled down by the device count (data-parallel work division) and
+collective properties already expressed per-device by
+``archcount.collective_counts``.
+
+This predictor powers:
+  * ``launch/autoshard.py`` — plan search (µs per candidate);
+  * ``runtime/straggler.py`` — expected-step-time thresholds;
+  * ``distributed/elastic.py`` — re-planning after node loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import archcount
+from repro.core import properties as props
+from repro.core.model import LinearCostModel
+
+# --- v5e hardware constants (per chip) ---
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+PEAK_FLOPS_F32 = 49e12       # VPU-ish f32 rate
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (≈3 links usable per axis-dir)
+LAUNCH_S = 5e-6              # per-dispatch overhead
+
+
+def tpu_v5e_weights() -> LinearCostModel:
+    """Analytic seconds-per-event weights for the property taxonomy."""
+    w: Dict[str, float] = {}
+    w[props.mxu_key(16)] = 1.0 / PEAK_FLOPS_BF16
+    w[props.mxu_key(32)] = 1.0 / (PEAK_FLOPS_BF16 / 4)  # f32 matmul 1/4 rate
+    for kind, mult in (("add", 1.0), ("mul", 1.0), ("div", 4.0),
+                       ("exp", 8.0), ("special", 8.0)):
+        w[props.flop_key(32, kind)] = mult / PEAK_FLOPS_F32
+        w[props.flop_key(16, kind)] = mult / (2 * PEAK_FLOPS_F32)
+    for bits in props.SIZES:
+        by = bits // 8
+        for d in props.DIRECTIONS:
+            w[props.mem_key(d, bits, "s0")] = 0.0          # broadcast: cached
+            w[props.mem_key(d, bits, "s1")] = by / HBM_BW
+            w[props.mem_key(d, bits, "gather")] = 4.0 * by / HBM_BW
+            for s in (2, 3, 4):
+                for k in range(1, s + 1):
+                    # stride-s with k/s utilization: pay the full footprint
+                    w[props.mem_key(d, bits, f"s{s}_{k}/{s}")] = \
+                        by * (s / k) / HBM_BW
+            for k in range(1, 5):
+                w[props.mem_key(d, bits, f"s>4_{k}/>4")] = 4.0 * by / HBM_BW
+        w[props.minls_key(bits)] = 0.0   # duplex HBM: no extra gain modeled
+        w[props.local_key(bits)] = by / (20 * HBM_BW)  # VMEM ≈ 20× HBM BW
+    for c in props.COLLECTIVES:
+        # ring collectives over ICI; all_to_all crosses bisection
+        w[props.coll_key(c)] = 1.0 / (3 * ICI_BW) if c != "all_to_all" \
+            else 1.0 / (2 * ICI_BW)
+    w[props.BARRIER] = 1e-7
+    w[props.GROUPS] = 1e-7
+    w[props.CONST1] = LAUNCH_S
+    return LinearCostModel.from_dict(w, device="tpu-v5e-analytic",
+                                     meta={"source": "datasheet-seed"})
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepPrediction:
+    seconds: float
+    breakdown: Dict[str, float]      # per-property seconds
+    terms: Dict[str, float]          # compute / memory / collective seconds
+    model_flops: float
+    mfu: float                       # MODEL_FLOPS / (chips·peak·seconds)
+
+
+def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
+    if shape.kind == "decode":
+        return {"B": shape.global_batch, "S": shape.seq_len,
+                "M": microbatches}
+    return {"B": shape.global_batch, "S": shape.seq_len, "M": microbatches}
+
+
+def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
+                 mesh_shape: Mapping[str, int],
+                 weights: Optional[LinearCostModel] = None,
+                 ) -> StepPrediction:
+    """Predict one step's wall time on ``mesh_shape`` under ``plan``."""
+    weights = weights or tpu_v5e_weights()
+    n_dev = int(np.prod(list(mesh_shape.values()))) or 1
+    env = _env_for(shape, plan.microbatches)
+
+    sc = archcount.counts_for(cfg, shape.kind,
+                              remat_policy=plan.remat_policy)
+    pv = sc.concrete(env)
+    # compute/memory events divide over the mesh (SPMD work division)
+    pv = {k: v / n_dev for k, v in pv.items()}
+    coll = archcount.collective_counts(cfg, shape.kind, plan, mesh_shape)
+    from repro.core.symcount import evaluate_vector
+    pv.update(evaluate_vector(coll, env))
+    pv[props.CONST1] = 1.0
+
+    bd = weights.breakdown(pv)
+    total = sum(bd.values())
+    terms = {"compute": 0.0, "memory": 0.0, "collective": 0.0, "other": 0.0}
+    for k, v in bd.items():
+        if k.startswith(("mxu", "flop")):
+            terms["compute"] += v
+        elif k.startswith(("load", "store", "local", "minls")):
+            terms["memory"] += v
+        elif k.startswith("coll"):
+            terms["collective"] += v
+        else:
+            terms["other"] += v
+    mf = sc.concrete_model_flops(env)
+    mfu = mf / (n_dev * PEAK_FLOPS_BF16 * total) if total > 0 else 0.0
+    return StepPrediction(seconds=total, breakdown=bd, terms=terms,
+                          model_flops=mf, mfu=mfu)
+
+
+def rank_plans(cfg: ArchConfig, shape: ShapeConfig, plans,
+               mesh_shape: Mapping[str, int],
+               weights: Optional[LinearCostModel] = None):
+    """Sort candidate plans by predicted step time (ascending) — the paper's
+    §6.2 'select the optimal set of kernel configurations', realized."""
+    scored = [(predict_step(cfg, shape, p, mesh_shape, weights).seconds, i, p)
+              for i, p in enumerate(plans)]
+    scored.sort(key=lambda t: (t[0], t[1]))
+    return [(s, p) for s, _, p in scored]
+
+
+# ---------------------------------------------------------------------------
+# HBM feasibility (capacity is out of the paper's model scope — §2 — so the
+# framework enforces it as a *constraint*, not a cost term)
+# ---------------------------------------------------------------------------
+
+HBM_BYTES = 16e9  # v5e
+
+
+def estimate_peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plan,
+                        mesh_shape: Mapping[str, int]) -> float:
+    """Closed-form peak HBM bytes/device for a plan (napkin-math grade:
+    params + optimizer + gradients + activation working set or caches)."""
+    dp = 1
+    for ax in plan.dp_axes:
+        dp *= mesh_shape.get(ax, 1)
+    tp = mesh_shape.get(plan.tp_axis, 1) if plan.tp_axis else 1
+    P = cfg.n_params()
+    bytes_p = 2 if "16" in cfg.param_dtype else 4
+    pshard = tp * (dp if plan.fsdp else 1)
+    total = P * bytes_p / pshard
+
+    if shape.kind == "train":
+        opt_bytes = {"adamw": 8.0, "adafactor": 0.1, "sgd": 4.0}[cfg.optimizer]
+        total += P * opt_bytes / pshard           # optimizer state
+        total += P * 4.0 / pshard                 # f32 grads (transient)
+        if plan.fsdp and dp > 1:
+            # scan-over-layers gathers ONE layer's shard at a time
+            total += P * bytes_p / (tp * max(cfg.n_layers, 1))
+        Bm = shape.global_batch / max(plan.microbatches, 1)
+        tok = Bm * shape.seq_len / dp
+        act_shard = tp if plan.sequence_parallel else 1
+        remat = plan.remat_policy or cfg.remat_policy
+        saves = {"full": 1.0, "nothing": 1.0, "dots": 4.0,
+                 "none": 10.0, None: 1.0}[remat]
+        total += saves * cfg.n_layers * tok * cfg.d_model * 2 / act_shard
+        total += 12.0 * tok * cfg.d_model * 2 / act_shard  # live layer
+        # logits in f32 for the loss
+        total += tok * cfg.vocab_size * cfg.n_output_heads * 4 / tp
+    elif shape.kind == "prefill":
+        tok = shape.global_batch * shape.seq_len / dp
+        total += 16.0 * tok * cfg.d_model * 2 / (tp if plan.sequence_parallel else 1)
+        total += tok * cfg.vocab_size * cfg.n_output_heads * 2 / tp
+    else:  # decode: KV/SSM caches dominate
+        Bd = shape.global_batch / dp
+        if cfg.n_heads:
+            ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+            n_attn = (cfg.n_layers // cfg.hybrid.attn_every
+                      if cfg.family == "hybrid" else cfg.n_layers)
+            kv_shard = max(len(plan.cache_seq_axes) and tp or 1,
+                           1 if plan.cache_seq_axes else
+                           min(tp, cfg.n_kv_heads))
+            total += (2 * Bd * ctx * cfg.n_kv_heads * cfg.head_dim_
+                      * 2 * n_attn) / kv_shard
+        if cfg.ssm is not None:
+            total += (cfg.n_layers * Bd * cfg.ssm_heads * cfg.ssm.head_dim
+                      * cfg.ssm.d_state * 4) / min(tp, cfg.ssm_heads)
+    return float(total)
+
+
+def feasible(cfg: ArchConfig, shape: ShapeConfig, plan,
+             mesh_shape: Mapping[str, int],
+             budget: float = HBM_BYTES) -> bool:
+    return estimate_peak_bytes(cfg, shape, plan, mesh_shape) <= budget

@@ -1,0 +1,257 @@
+"""Symbolic count expressions — the piecewise-quasi-polynomial analog.
+
+The paper represents every kernel property as a piecewise quasi-polynomial
+in the size parameters ``n`` (produced by Barvinok counting), so that a
+property vector can be *cheaply re-evaluated for changed problem sizes*
+("our model is fully parametric").  This module supplies the same capability
+for our JAX-based extraction: a tiny, dependency-free expression language
+
+    Expr := Const | Var | Add | Mul | FloorDiv | CeilDiv | Max | Min | Piecewise
+
+with operator overloading, substitution, evaluation and pretty-printing.
+Counts produced by ``core.archcount`` (closed-form per-architecture) are
+Exprs; ``core.extract`` produces concrete integers for a concrete ``n`` and
+tests assert the two agree on sweeps.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Mapping, Tuple, Union
+
+Number = Union[int, float]
+
+
+def as_expr(x: "ExprLike") -> "Expr":
+    if isinstance(x, Expr):
+        return x
+    if isinstance(x, (int, float)):
+        return Const(x)
+    raise TypeError(f"cannot convert {type(x)} to Expr")
+
+
+class Expr:
+    """Base class.  Immutable; hashable by structure string."""
+
+    def eval(self, env: Mapping[str, Number]) -> Number:
+        raise NotImplementedError
+
+    def free_vars(self) -> set:
+        raise NotImplementedError
+
+    # -- operator sugar ----------------------------------------------------
+    def __add__(self, o):  return Add(self, as_expr(o))
+    def __radd__(self, o): return Add(as_expr(o), self)
+    def __mul__(self, o):  return Mul(self, as_expr(o))
+    def __rmul__(self, o): return Mul(as_expr(o), self)
+    def __sub__(self, o):  return Add(self, Mul(Const(-1), as_expr(o)))
+    def __rsub__(self, o): return Add(as_expr(o), Mul(Const(-1), self))
+    def __floordiv__(self, o): return FloorDiv(self, as_expr(o))
+    def __truediv__(self, o):  return Mul(self, Pow(as_expr(o), -1))
+    def __pow__(self, k: int): return Pow(self, k)
+
+    def __eq__(self, o):
+        return isinstance(o, Expr) and repr(self) == repr(o)
+
+    def __hash__(self):
+        return hash(repr(self))
+
+
+class Const(Expr):
+    def __init__(self, v: Number):
+        self.v = v
+
+    def eval(self, env):
+        return self.v
+
+    def free_vars(self):
+        return set()
+
+    def __repr__(self):
+        if isinstance(self.v, float) and self.v.is_integer():
+            return repr(int(self.v))
+        return repr(self.v)
+
+
+class Var(Expr):
+    def __init__(self, name: str):
+        self.name = name
+
+    def eval(self, env):
+        if self.name not in env:
+            raise KeyError(f"unbound size parameter {self.name!r}")
+        return env[self.name]
+
+    def free_vars(self):
+        return {self.name}
+
+    def __repr__(self):
+        return self.name
+
+
+class Add(Expr):
+    def __init__(self, a: Expr, b: Expr):
+        self.a, self.b = a, b
+
+    def eval(self, env):
+        return self.a.eval(env) + self.b.eval(env)
+
+    def free_vars(self):
+        return self.a.free_vars() | self.b.free_vars()
+
+    def __repr__(self):
+        return f"({self.a} + {self.b})"
+
+
+class Mul(Expr):
+    def __init__(self, a: Expr, b: Expr):
+        self.a, self.b = a, b
+
+    def eval(self, env):
+        return self.a.eval(env) * self.b.eval(env)
+
+    def free_vars(self):
+        return self.a.free_vars() | self.b.free_vars()
+
+    def __repr__(self):
+        return f"{self._p(self.a)}*{self._p(self.b)}"
+
+    @staticmethod
+    def _p(e):
+        return f"({e})" if isinstance(e, Add) else repr(e)
+
+
+class Pow(Expr):
+    def __init__(self, a: Expr, k: int):
+        self.a, self.k = a, k
+
+    def eval(self, env):
+        return self.a.eval(env) ** self.k
+
+    def free_vars(self):
+        return self.a.free_vars()
+
+    def __repr__(self):
+        return f"{Mul._p(self.a)}^{self.k}"
+
+
+class FloorDiv(Expr):
+    def __init__(self, a: Expr, b: Expr):
+        self.a, self.b = a, b
+
+    def eval(self, env):
+        return self.a.eval(env) // self.b.eval(env)
+
+    def free_vars(self):
+        return self.a.free_vars() | self.b.free_vars()
+
+    def __repr__(self):
+        return f"floor({self.a} / {self.b})"
+
+
+class CeilDiv(Expr):
+    def __init__(self, a: Expr, b: Expr):
+        self.a, self.b = a, b
+
+    def eval(self, env):
+        return -((-self.a.eval(env)) // self.b.eval(env))
+
+    def free_vars(self):
+        return self.a.free_vars() | self.b.free_vars()
+
+    def __repr__(self):
+        return f"ceil({self.a} / {self.b})"
+
+
+class Max(Expr):
+    def __init__(self, *args: Expr):
+        self.args = tuple(as_expr(a) for a in args)
+
+    def eval(self, env):
+        return max(a.eval(env) for a in self.args)
+
+    def free_vars(self):
+        return set().union(*(a.free_vars() for a in self.args))
+
+    def __repr__(self):
+        return f"max({', '.join(map(repr, self.args))})"
+
+
+class Min(Expr):
+    def __init__(self, *args: Expr):
+        self.args = tuple(as_expr(a) for a in args)
+
+    def eval(self, env):
+        return min(a.eval(env) for a in self.args)
+
+    def free_vars(self):
+        return set().union(*(a.free_vars() for a in self.args))
+
+    def __repr__(self):
+        return f"min({', '.join(map(repr, self.args))})"
+
+
+class Piecewise(Expr):
+    """[(cond_fn_expr_pair)...] — the 'piecewise' in piecewise quasi-polynomial.
+
+    ``branches`` is a list of (guard, value); guard is an Expr evaluated
+    truthy (>0), the first truthy guard wins; ``otherwise`` is the default.
+    """
+
+    def __init__(self, branches: Iterable[Tuple[Expr, Expr]], otherwise: Expr):
+        self.branches = [(as_expr(g), as_expr(v)) for g, v in branches]
+        self.otherwise = as_expr(otherwise)
+
+    def eval(self, env):
+        for g, v in self.branches:
+            if g.eval(env) > 0:
+                return v.eval(env)
+        return self.otherwise.eval(env)
+
+    def free_vars(self):
+        s = self.otherwise.free_vars()
+        for g, v in self.branches:
+            s |= g.free_vars() | v.free_vars()
+        return s
+
+    def __repr__(self):
+        bs = "; ".join(f"{v} if {g}>0" for g, v in self.branches)
+        return f"piecewise({bs}; else {self.otherwise})"
+
+
+ExprLike = Union[Expr, int, float]
+
+
+# ---------------------------------------------------------------------------
+# Property-vector helpers (dict of name -> Expr | number)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_vector(pv: Mapping[str, ExprLike], env: Mapping[str, Number]
+                    ) -> Dict[str, Number]:
+    out = {}
+    for k, v in pv.items():
+        out[k] = v.eval(env) if isinstance(v, Expr) else v
+    return out
+
+
+def add_vectors(*vecs: Mapping[str, ExprLike]) -> Dict[str, ExprLike]:
+    out: Dict[str, ExprLike] = {}
+    for v in vecs:
+        for k, x in v.items():
+            if k in out:
+                out[k] = as_expr(out[k]) + as_expr(x) \
+                    if isinstance(out[k], Expr) or isinstance(x, Expr) \
+                    else out[k] + x
+            else:
+                out[k] = x
+    return out
+
+
+def scale_vector(pv: Mapping[str, ExprLike], c: ExprLike) -> Dict[str, ExprLike]:
+    out = {}
+    for k, v in pv.items():
+        if isinstance(v, Expr) or isinstance(c, Expr):
+            out[k] = as_expr(v) * as_expr(c)
+        else:
+            out[k] = v * c
+    return out

@@ -1,0 +1,76 @@
+"""Elastic re-planning: on node/pod loss, choose the best feasible
+(mesh, plan) for the surviving devices and resume from the last checkpoint.
+
+Uses the fitted/analytic linear cost model (core/predictor.py) to rank the
+candidate meshes in microseconds — the paper's 'rapid evaluation' property
+is what makes in-failure-path re-planning viable at all (a compile-and-
+measure search would take minutes per candidate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import predictor
+from repro.core.model import LinearCostModel
+from repro.distributed.plan import Plan, plan_for
+
+
+@dataclass(frozen=True)
+class MeshOption:
+    shape: Dict[str, int]          # axis -> size
+    plan: Plan
+    predicted_step_s: float
+
+
+def _factorizations(n: int) -> List[Tuple[int, int]]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append((d, n // d))
+            if d != n // d:
+                out.append((n // d, d))
+        d += 1
+    return sorted(set(out))
+
+
+def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
+           weights: Optional[LinearCostModel] = None,
+           max_candidates: int = 64) -> List[MeshOption]:
+    """Rank feasible (data × model) meshes for ``n_devices`` survivors.
+
+    Feasibility: the global batch must still divide the data axis (training
+    keeps exact batch semantics across restarts) and the model dims must
+    divide the model axis (checked softly — the sharding layer drops
+    non-divisible axes, so these plans still *lower*, they just waste the
+    axis; the predictor prices that in).
+    """
+    opts: List[MeshOption] = []
+    for dp, tp in _factorizations(n_devices)[:max_candidates]:
+        if shape.kind == "train" and shape.global_batch % dp != 0:
+            continue
+        mesh_shape = {"data": dp, "model": tp}
+        plan = plan_for(cfg, shape, multi_pod=False, tp_size=tp)
+        plan = dataclasses.replace(plan, dp_axes=("data",))
+        pred = predictor.predict_step(cfg, shape, plan, mesh_shape, weights)
+        opts.append(MeshOption(mesh_shape, plan, pred.seconds))
+    opts.sort(key=lambda o: o.predicted_step_s)
+    return opts
+
+
+def on_failure(cfg: ArchConfig, shape: ShapeConfig, prev_devices: int,
+               lost: int, weights: Optional[LinearCostModel] = None
+               ) -> MeshOption:
+    """Failure handler: fall back to the best mesh over the largest
+    'round' (power-of-two) survivor count — spares become hot standbys,
+    matching how real pods drain around a failed host."""
+    survivors = prev_devices - lost
+    n = 1
+    while n * 2 <= survivors:
+        n *= 2
+    options = replan(cfg, shape, n, weights)
+    assert options, f"no feasible mesh for {n} devices"
+    return options[0]

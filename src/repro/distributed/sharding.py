@@ -1,0 +1,154 @@
+"""Logical-axis sharding (MaxText-style), without a flax dependency.
+
+Models annotate activations with *logical* axis names via ``logical()``;
+parameters carry logical axes in a parallel ``axes`` tree.  A thread-local
+``ShardingCtx`` (mesh + Plan rules) resolves names to ``PartitionSpec``s.
+Outside any context, ``logical()`` is the identity — so smoke tests and
+benchmarks run unsharded on one device.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.plan import Plan
+
+_tls = threading.local()
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, plan: Plan):
+        self.mesh = mesh
+        self.plan = plan
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    # ------------------------------------------------------------------
+    def _resolve(self, rule_value, dim: int) -> Optional[Tuple[str, ...]]:
+        """Mesh axes for one dim, dropping axes that don't divide it or
+        don't exist in this mesh."""
+        if rule_value is None:
+            return None
+        axes = (rule_value,) if isinstance(rule_value, str) else tuple(rule_value)
+        out = []
+        size = 1
+        for ax in axes:
+            if ax not in self.axis_sizes:
+                continue
+            s = self.axis_sizes[ax]
+            if dim % (size * s) == 0:
+                out.append(ax)
+                size *= s
+        return tuple(out) or None
+
+    def spec(self, logical_axes: Sequence[Optional[str]], shape: Sequence[int],
+             rules: dict) -> P:
+        parts, used = [], set()
+        for name, dim in zip(logical_axes, shape):
+            r = self._resolve(rules.get(name), dim) if name else None
+            # an axis may be used at most once per spec
+            if r:
+                r = tuple(ax for ax in r if ax not in used)
+            if r:
+                used.update(r)
+                parts.append(r if len(r) > 1 else r[0])
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def param_spec(self, logical_axes, shape) -> P:
+        return self.spec(logical_axes, shape, self.plan.param_rules())
+
+    def act_spec(self, logical_axes, shape) -> P:
+        return self.spec(logical_axes, shape, self.plan.act_rules())
+
+
+def current() -> Optional[ShardingCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextmanager
+def use_sharding(mesh: Mesh, plan: Plan):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = ShardingCtx(mesh, plan)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def logical(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with logical axis names (no-op w/o context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.act_spec(names, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding trees
+# ---------------------------------------------------------------------------
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf is a plain tuple of axis names (str | None) —
+    NamedTuples (KVCache, SSMState, …) are containers, not leaves."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def param_shardings(mesh: Mesh, plan: Plan, axes_tree, shapes_tree):
+    """NamedSharding tree for a param pytree given its logical-axes tree."""
+    ctx = ShardingCtx(mesh, plan)
+
+    def one(axes, shp):
+        shape = shp.shape if hasattr(shp, "shape") else shp
+        return NamedSharding(mesh, ctx.param_spec(axes, shape))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def tree_bytes(shapes_tree) -> int:
+    leaves = jax.tree.leaves(shapes_tree)
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+def context_parallel_factor(n_heads: int, seq_len: int,
+                            min_slice: int = 1024) -> int:
+    """How many ways to split the q-sequence for attention (context
+    parallelism).  Used when the head dim cannot occupy the model axis
+    (n_heads % tp != 0): slicing the q range over the same axis recovers
+    the tp-fold division of attention compute (k/v stay replicated; the
+    causal diagonal makes slices unequal work — see DESIGN.md §Perf)."""
+    ctx = current()
+    if ctx is None or ctx.plan.tp_axis is None:
+        return 1
+    tp = ctx.axis_sizes.get(ctx.plan.tp_axis, 1)
+    if tp <= 1 or n_heads % tp == 0:
+        return 1  # head sharding already uses the axis fully
+    if seq_len % (tp * min_slice) != 0:
+        return 1
+    return tp
+
+
+def constrain_like_params(tree, axes_tree):
+    """Pin a param-shaped tree (e.g. the gradient accumulator) to the param
+    sharding rules.  No-op outside a sharding context.  Without this, GSPMD
+    materializes REPLICATED f32 dW partials inside the grad-accumulation
+    loop (all-reduce + slice) instead of reduce-scattering into the sharded
+    accumulator — 8–12 GB/layer on the 405B lowering."""
+    ctx = current()
+    if ctx is None:
+        return tree
+
+    def one(axes, x):
+        spec = ctx.param_spec(axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, spec))
+
+    return jax.tree.map(one, axes_tree, tree, is_leaf=is_axes_leaf)

@@ -1,0 +1,64 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernel bodies execute in Python for
+validation) and False on TPU (compiled for the MXU/VMEM target).  Model code
+calls these wrappers; swapping the XLA production path for the Pallas hot
+path is a Plan-level switch (``Plan.use_pallas`` in the runtime).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import transpose as _tr
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (B,H,Sq,dh) × k,v (B,KVH,Skv,dh) → (B,H,Sq,dh)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             interpret: Optional[bool] = None) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """Chunked SSD: x (Bz,H,L,P), dt (Bz,H,L), A (H,), B/C (Bz,G,L,N)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "interpret"))
+def matmul(a, b, *, block_m: int = 128, block_n: int = 128,
+           block_k: int = 128, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _mm.matmul(a, b, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def transpose(x, *, block: int = 256, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _tr.transpose(x, block=block, interpret=interpret)

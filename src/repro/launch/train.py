@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 200 --batch 8 --seq 256 --reduced --ckpt /tmp/ck
+
+On the CPU container this drives reduced configs end-to-end (the ~100M-scale
+example); on a TPU slice the same entry point runs the full configs on the
+production mesh (``--mesh single|multi``) with the plan from
+``plan_for`` / ``autoshard``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_arch
+from repro.data.pipeline import DataConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.core import predictor
+from repro.distributed.plan import plan_for
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced same-family config (CPU scale)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch, seed=args.seed,
+                    n_codebooks=cfg.n_input_codebooks)
+    tc = TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+                       lr=args.lr, total_steps=args.steps, seed=args.seed)
+
+    # cost-model prediction for the straggler monitor threshold
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.seq,
+                                global_batch=args.batch)
+    plan = plan_for(ARCHS[args.arch], SHAPES["train_4k"])
+    pred = predictor.predict_step(ARCHS[args.arch], shape, plan,
+                                  {"data": 1, "model": 1})
+    print(f"[train] {cfg.name}: {cfg.n_params()/1e6:.1f}M params, "
+          f"predicted full-arch step {pred.seconds*1e3:.1f}ms on 1 chip")
+
+    trainer = Trainer(cfg, dc, tc)
+    hist = trainer.train(args.steps)
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+"""Optimizers (functional, optax-style but dependency-free).
+
+- ``adamw``     : fp32 m/v (dtype configurable) + decoupled weight decay.
+- ``adafactor`` : factored second moment (Shampoo-free memory diet) — used by
+                  llama3-405b whose fp32 Adam states would not fit v5e HBM
+                  (see DESIGN.md §2 / EXPERIMENTS.md §Dry-run).
+- ``sgd``       : momentum SGD (measurement baseline).
+
+All updates are computed in fp32 and cast back to the param dtype.
+Optimizer state mirrors the param tree, so the FSDP/TP shardings of the
+params apply leaf-wise to the state (see ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return (_cast_like(p_new, p), m_new.astype(state_dtype),
+                    v_new.astype(state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v; optional bf16 momentum)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, momentum: Optional[float] = None,
+              momentum_dtype=jnp.bfloat16) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        st = {"v": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+        if momentum is not None:
+            st["m"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, momentum_dtype), params)
+        return st
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, v, p, m=None):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                keepdims=True)[..., None], eps))
+                upd_v = {"vr": vr, "vc": vc}
+                u = g * jax.lax.rsqrt(denom + eps)
+            else:
+                vf = beta * v["v"] + (1 - beta) * g2
+                upd_v = {"v": vf}
+                u = g * jax.lax.rsqrt(vf + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if m is not None:
+                u = momentum * m.astype(jnp.float32) + (1 - momentum) * u
+                new_m = u.astype(momentum_dtype)
+            else:
+                new_m = None
+            p_new = p.astype(jnp.float32) - lr * u
+            return _cast_like(p_new, p), upd_v, new_m
+
+        is_v = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        if momentum is not None:
+            out = jax.tree.map(upd, grads, state["v"], params, state["m"],
+                               is_leaf=lambda x: is_v(x) or hasattr(x, "shape"))
+        else:
+            out = jax.tree.map(lambda g, v, p: upd(g, v, p),
+                               grads, state["v"], params, is_leaf=is_v)
+        tup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=tup)
+        new_v = jax.tree.map(lambda o: o[1], out, is_leaf=tup)
+        new_state = {"v": new_v, "count": count}
+        if momentum is not None:
+            new_state["m"] = jax.tree.map(lambda o: o[2], out, is_leaf=tup)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m_new = momentum * m + g.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return _cast_like(p_new, p), m_new
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        tup = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda o: o[0], out, is_leaf=tup),
+                {"m": jax.tree.map(lambda o: o[1], out, is_leaf=tup),
+                 "count": state["count"] + 1})
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    if name == "sgd":
+        return sgd()
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules + grad clipping
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * jnp.minimum(1.0, step / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state logical axes (for distributed sharding of TrainState)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_axes(name: str, params_axes):
+    """Logical-axes tree mirroring ``get_optimizer(name).init(params)``.
+
+    Leaf-wise: AdamW m/v inherit the param axes; Adafactor's factored vr/vc
+    drop the last / second-to-last axis.  ``count`` is a replicated scalar.
+    """
+    is_ax = lambda x: isinstance(x, tuple)
+    if name == "adamw":
+        return {
+            "m": params_axes,
+            "v": params_axes,
+            "count": (),
+        }
+    if name == "adafactor":
+        def one(ax):
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+        return {"v": jax.tree.map(one, params_axes, is_leaf=is_ax),
+                "count": ()}
+    if name == "sgd":
+        return {"m": params_axes, "count": ()}
+    raise KeyError(name)

@@ -1,0 +1,44 @@
+"""Runtime feature flags (thread-local, context-managed).
+
+``use_pallas()`` switches the attention / SSD mixers from their XLA
+production paths to the Pallas TPU kernels (interpret-mode on CPU).  The
+two paths are numerically equivalent (tests assert it); the flag exists so
+the dry-run/CPU paths stay fast while TPU deployments take the kernel path.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+_tls = threading.local()
+
+
+def pallas_enabled() -> bool:
+    return getattr(_tls, "pallas", False)
+
+
+@contextmanager
+def use_pallas(enabled: bool = True):
+    prev = getattr(_tls, "pallas", False)
+    _tls.pallas = enabled
+    try:
+        yield
+    finally:
+        _tls.pallas = prev
+
+
+def attention_stubbed() -> bool:
+    return getattr(_tls, "attn_stub", False)
+
+
+@contextmanager
+def stub_attention(enabled: bool = True):
+    """Replace the attention contraction with a free pass-through — used to
+    ATTRIBUTE which share of a lowering's cost is attention (diff of two
+    dry-runs; benchmarks/kernel_roofline.py)."""
+    prev = getattr(_tls, "attn_stub", False)
+    _tls.attn_stub = enabled
+    try:
+        yield
+    finally:
+        _tls.attn_stub = prev

@@ -1,0 +1,106 @@
+"""Batched decode server: continuous batching over fixed decode slots.
+
+A fixed (B, max_len) KV/SSM state is allocated once; finished sequences
+free their slot, which is refilled from the request queue (prefill of the
+new prompt writes into that slot's cache rows).  This is the standard
+slot-based continuous-batching layout adapted to JAX's static shapes:
+the *shapes* never change, only slot occupancy masks do.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.runtime import steps
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray        # (S,) int32
+    max_new: int = 32
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 512, eos_id: int = 0, seed: int = 0):
+        assert cfg.n_input_codebooks == 1, "codebook serving via examples/"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.rng = jax.random.PRNGKey(seed)
+        self.state = transformer.init_decode_state(cfg, slots, max_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.remaining = np.zeros(slots, np.int32)
+
+        self._decode = jax.jit(
+            lambda p, s, t: transformer.decode_step(p, cfg, s, t))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Feed the prompt token-by-token into this slot's cache rows.
+
+        (A production server prefills with one chunked forward; the decode
+        loop here is the clear-and-correct path for the CPU example, and
+        prefill_step covers the fast path in the dry-run/bench.)"""
+        for t in req.prompt:
+            tok = np.zeros((self.slots, 1), np.int32)
+            tok[slot, 0] = t
+            logits, self.state = self._decode(
+                self.params, self.state, jnp.asarray(tok))
+        self.active[slot] = req
+        self.remaining[slot] = req.max_new
+
+    def _refill(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self._prefill_slot(s, self.queue.pop(0))
+
+    def step(self) -> None:
+        """One decode iteration across all occupied slots."""
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                tok[s, 0] = req.out[-1] if req.out else req.prompt[-1]
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(tok))
+        self.rng, sub = jax.random.split(self.rng)
+        nxt = np.asarray(jax.random.categorical(
+            sub, jnp.asarray(logits[:, -1], jnp.float32), axis=-1))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            t = int(nxt[s])
+            req.out.append(t)
+            self.remaining[s] -= 1
+            if t == self.eos_id or self.remaining[s] <= 0:
+                req.done = True
+                self.active[s] = None
+
+    def run(self, max_iters: int = 10_000) -> List[Request]:
+        """Serve until queue + slots drain; returns completed requests."""
+        done: List[Request] = []
+        pending = lambda: self.queue or any(self.active)
+        it = 0
+        while pending() and it < max_iters:
+            self._refill()
+            before = [r for r in self.active if r]
+            self.step()
+            done.extend(r for r in before if r.done)
+            it += 1
+        return done

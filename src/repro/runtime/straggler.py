@@ -1,0 +1,69 @@
+"""Straggler detection + mitigation.
+
+The monitor compares *observed* per-host step times against the cost
+model's *predicted* step time (core/predictor.py) — the paper's §6.1 'load
+balancing' application.  A host is a straggler when its EWMA exceeds
+``k × max(predicted, fleet median)``.
+
+Mitigations (policy chosen by the trainer):
+  * ``report``   — log only;
+  * ``rescale``  — drop the host's microbatch contribution this step and
+                   rescale the gradient (synchronous skip-and-rescale);
+  * ``replan``   — hand off to distributed/elastic.py for a smaller mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    host: int
+    observed_s: float
+    threshold_s: float
+    action: str
+
+
+@dataclass
+class StragglerMonitor:
+    n_hosts: int
+    predicted_step_s: float
+    k: float = 2.0              # threshold multiplier
+    ewma: float = 0.5           # smoothing for per-host times
+    policy: str = "rescale"     # report | rescale | replan
+    _state: np.ndarray = field(default=None)  # per-host EWMA
+    events: List[StragglerEvent] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self._state is None:
+            self._state = np.full(self.n_hosts, self.predicted_step_s)
+
+    def threshold(self) -> float:
+        return self.k * max(self.predicted_step_s,
+                            float(np.median(self._state)))
+
+    def observe(self, step: int, host_times_s) -> List[StragglerEvent]:
+        """Feed one step's per-host times; returns new straggler events."""
+        t = np.asarray(host_times_s, dtype=np.float64)
+        assert t.shape == (self.n_hosts,)
+        self._state = self.ewma * self._state + (1 - self.ewma) * t
+        thr = self.threshold()
+        new = []
+        for h in np.nonzero(self._state > thr)[0]:
+            ev = StragglerEvent(step, int(h), float(self._state[h]), thr,
+                                self.policy)
+            new.append(ev)
+        self.events.extend(new)
+        return new
+
+    def healthy_mask(self) -> np.ndarray:
+        return self._state <= self.threshold()
+
+    def rescale_weight(self) -> float:
+        """Gradient rescale for skip-and-rescale: N / N_healthy."""
+        h = int(self.healthy_mask().sum())
+        return self.n_hosts / max(h, 1)

@@ -1,0 +1,158 @@
+"""Fitting + linear-model tests (paper §2, §4.3) incl. hypothesis
+property-based checks on the model's invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fit
+from repro.core import properties as props
+from repro.core.model import LinearCostModel, geomean, relative_error
+
+
+def _synthetic(n_kernels=40, n_props=6, seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    keys = [f"p{i}" for i in range(n_props)]
+    true_w = rng.uniform(1e-9, 1e-6, n_props)
+    pvs, times = [], []
+    for _ in range(n_kernels):
+        counts = rng.integers(0, 10 ** 6, n_props).astype(float)
+        counts[rng.random(n_props) < 0.3] = 0.0
+        t = float(counts @ true_w) + 1e-7
+        t *= 1.0 + noise * rng.standard_normal()
+        pvs.append(dict(zip(keys, counts)))
+        times.append(max(t, 1e-9))
+    return pvs, times, keys, true_w
+
+
+def test_fit_recovers_exact_synthetic_weights():
+    pvs, times, keys, true_w = _synthetic()
+    m = fit.fit_relative(pvs, times, keys=keys)
+    pred = m.predict_many(pvs)
+    errs = [relative_error(p, t) for p, t in zip(pred, times)]
+    assert geomean(errs) < 1e-3
+
+
+def test_fit_is_relative_not_absolute():
+    """Two kernels, one 1000× slower: relative fit must not sacrifice the
+    fast kernel's relative accuracy (absolute LS would)."""
+    pvs = [{"a": 1.0}, {"a": 1.0, "b": 1.0}]
+    times = [1e-6, 1e-3]
+    m = fit.fit_relative(pvs, times)
+    assert relative_error(m.predict(pvs[0]), times[0]) < 1e-6
+    assert relative_error(m.predict(pvs[1]), times[1]) < 1e-6
+
+
+def test_fit_allows_negative_weights():
+    """Paper Table 2 has negative fitted weights (min(L,S), local loads) —
+    NNLS must be opt-in, not forced."""
+    pvs = [{"a": 2.0, "b": 1.0}, {"a": 4.0, "b": 1.0}, {"a": 1.0}]
+    times = [3e-6, 7e-6, 2e-6]  # implies b negative
+    m = fit.fit_relative(pvs, times)
+    w = dict(zip(m.keys, m.weights))
+    assert w["b"] < 0
+
+
+def test_fit_nonneg_projects():
+    pvs, times, keys, _ = _synthetic(seed=3)
+    m = fit.fit_relative(pvs, times, keys=keys, nonneg=True)
+    assert (m.weights >= 0).all()
+
+
+@given(st.floats(1e-9, 1e-3), st.floats(1.5, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_relative_error_properties(t, factor):
+    assert relative_error(t, t) == 0
+    assert relative_error(t * factor, t) == pytest.approx(factor - 1)
+
+
+@given(st.lists(st.floats(0.01, 10.0), min_size=1, max_size=20))
+@settings(max_examples=100, deadline=None)
+def test_geomean_bounds(xs):
+    g = geomean(xs)
+    assert min(xs) - 1e-9 <= g <= max(xs) + 1e-9
+
+
+def test_model_predict_is_inner_product_and_breakdown_sums():
+    keys = ["x", "y", "z"]
+    m = LinearCostModel(keys=keys, weights=np.array([1e-9, 2e-9, -1e-9]))
+    pv = {"x": 10.0, "y": 5.0, "z": 3.0, "unknown": 99.0}
+    expect = 10e-9 + 10e-9 - 3e-9
+    assert m.predict(pv) == pytest.approx(expect)
+    assert sum(m.breakdown(pv).values()) == pytest.approx(expect)
+
+
+def test_model_save_load_roundtrip(tmp_path):
+    m = LinearCostModel(keys=["a", "b"], weights=np.array([1.5e-9, 2.5e-9]),
+                        device="test", meta={"k": 1})
+    p = str(tmp_path / "m.json")
+    m.save(p)
+    m2 = LinearCostModel.load(p)
+    assert m2.keys == m.keys and m2.device == "test"
+    np.testing.assert_allclose(m2.weights, m.weights)
+
+
+def test_finalize_adds_minls_and_const():
+    pv = props.finalize({
+        props.mem_key("load", 32, "s1"): 100.0,
+        props.mem_key("store", 32, "s1"): 40.0,
+        "zero": 0.0,
+    })
+    assert pv[props.minls_key(32)] == 40.0
+    assert pv[props.CONST1] == 1.0
+    assert "zero" not in pv
+
+
+def test_condition_report_flags_collinearity():
+    pvs = [{"a": float(i), "b": 2.0 * i} for i in range(1, 6)]
+    rep = fit.condition_report(pvs, [1e-6 * i for i in range(1, 6)])
+    assert rep["rank"] < rep["n_cols"]
+
+
+# ---------------------------------------------------------------------------
+# predictor-level invariants
+# ---------------------------------------------------------------------------
+
+
+def test_predictor_monotone_in_devices():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+    from repro.core import predictor
+    from repro.distributed.plan import Plan
+    cfg = ARCHS["glm4-9b"]
+    plan = Plan(dp_axes=("data",))
+    t_small = predictor.predict_step(cfg, SHAPES["train_4k"], plan,
+                                     {"data": 8, "model": 8}).seconds
+    t_big = predictor.predict_step(cfg, SHAPES["train_4k"], plan,
+                                   {"data": 16, "model": 16}).seconds
+    assert t_big < t_small
+
+
+def test_predictor_compression_reduces_collective_term():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+    from repro.core import predictor
+    from repro.distributed.plan import Plan
+    cfg = ARCHS["llama3.2-3b"]
+    mesh = {"data": 16, "model": 16}
+    base = Plan(dp_axes=("data",), fsdp=False)
+    comp = base.with_(compression="int8_ef")
+    t0 = predictor.predict_step(cfg, SHAPES["train_4k"], base, mesh)
+    t1 = predictor.predict_step(cfg, SHAPES["train_4k"], comp, mesh)
+    assert t1.terms["collective"] < t0.terms["collective"]
+
+
+def test_feasibility_rejects_remat_none_at_405b():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+    from repro.core import predictor
+    from repro.distributed.plan import Plan
+    cfg = ARCHS["llama3-405b"]
+    mesh = {"data": 16, "model": 16}
+    bad = Plan(dp_axes=("data",), fsdp=False, remat_policy="none",
+               microbatches=1)
+    good = Plan(dp_axes=("data",), fsdp=True, remat_policy="full",
+                microbatches=16)
+    assert not predictor.feasible(cfg, SHAPES["train_4k"], bad, mesh)
+    assert predictor.feasible(cfg, SHAPES["train_4k"], good, mesh)
