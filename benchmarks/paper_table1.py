@@ -95,6 +95,11 @@ def run(scale: str = "cpu", runs: int = 30, drop: int = 4,
     with open(os.path.join(OUT_DIR, "paper_table1.json"), "w") as f:
         json.dump(result, f, indent=1)
     model.save(os.path.join(OUT_DIR, f"model_cpu_{scale}.json"))
+    # also register it, so load_model("cpu-<scale>") serves this fit
+    from repro.calibration import registry
+    reg_path = registry.save_model(model)
+    if verbose:
+        print(f"# model registered at {reg_path}")
     return result
 
 

@@ -1,0 +1,26 @@
+"""Calibration & device-model registry — the paper's fit-once-per-device,
+predict-cheaply-anywhere loop as a subsystem.
+
+Public surface:
+
+  * ``calibrate(device, ...)`` — run the measurement-kernel suite on the
+    current runtime device, fit, report, and register the model
+    (``python -m repro.calibration`` is the CLI);
+  * ``load_model(device)`` / ``save_model(model)`` / ``list_models()`` —
+    the registry of fitted and analytic per-device models;
+  * ``resolve_model(x)`` — normalize ``None | name | LinearCostModel``
+    (the autoshard / straggler / elastic layers apply the same rules via
+    ``core.predictor.resolve_model``, which delegates names to this
+    registry).
+"""
+from repro.calibration.calibrate import CalibrationResult, calibrate
+from repro.calibration.registry import (UnknownDeviceError,
+                                        default_registry_dir, list_models,
+                                        load_model, resolve_model, save_model)
+from repro.calibration.seeds import ANALYTIC_SEEDS, Datasheet, analytic_model
+
+__all__ = [
+    "ANALYTIC_SEEDS", "CalibrationResult", "Datasheet", "UnknownDeviceError",
+    "analytic_model", "calibrate", "default_registry_dir", "list_models",
+    "load_model", "resolve_model", "save_model",
+]

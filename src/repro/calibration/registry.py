@@ -1,0 +1,124 @@
+"""The device-model registry — fit once per device, load anywhere.
+
+A registry is a plain directory of ``<device>.json`` files, each a
+schema-versioned ``LinearCostModel`` (see ``core.model.SCHEMA_VERSION``).
+Lookup order for ``load_model(device)``:
+
+  1. a **fitted** model file in the registry directory (written by the
+     calibration driver, ``python -m repro.calibration``);
+  2. a built-in **analytic** seed (``seeds.ANALYTIC_SEEDS``: the TPU-v5e
+     datasheet seed plus cross-vendor GPU datasheet seeds).
+
+The registry directory defaults to ``$REPRO_MODEL_REGISTRY`` or
+``experiments/registry`` under the current working directory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Dict, Optional
+
+from repro.calibration import seeds
+from repro.core.model import LinearCostModel, ModelSchemaError
+
+REGISTRY_ENV = "REPRO_MODEL_REGISTRY"
+DEFAULT_REGISTRY_DIR = os.path.join("experiments", "registry")
+
+
+class UnknownDeviceError(KeyError):
+    """No fitted or analytic model exists for the requested device."""
+
+    def __init__(self, device: str, available: Dict[str, str]):
+        self.device = device
+        self.available = available
+        listing = ", ".join(f"{n} ({k})" for n, k in sorted(available.items())) \
+            or "<none>"
+        super().__init__(
+            f"no model for device {device!r}; available: {listing}. "
+            f"Fit one with: python -m repro.calibration --device {device}")
+
+    def __str__(self) -> str:  # KeyError would repr() the message
+        return self.args[0]
+
+
+def default_registry_dir() -> str:
+    return os.environ.get(REGISTRY_ENV, DEFAULT_REGISTRY_DIR)
+
+
+def _model_path(registry_dir: str, device: str) -> str:
+    safe = re.sub(r"[^A-Za-z0-9._+-]", "_", device)
+    return os.path.join(registry_dir, f"{safe}.json")
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def save_model(model: LinearCostModel, registry_dir: Optional[str] = None,
+               name: Optional[str] = None) -> str:
+    """Write ``model`` into the registry under ``name`` (default: its
+    ``device`` field).  Returns the file path."""
+    registry_dir = registry_dir or default_registry_dir()
+    os.makedirs(registry_dir, exist_ok=True)
+    path = _model_path(registry_dir, name or model.device)
+    model.save(path)
+    return path
+
+
+def load_model(device: str, registry_dir: Optional[str] = None
+               ) -> LinearCostModel:
+    """Load the model for ``device``: fitted registry file first, then the
+    built-in analytic seeds.  Raises ``UnknownDeviceError`` otherwise."""
+    registry_dir = registry_dir or default_registry_dir()
+    path = _model_path(registry_dir, device)
+    if os.path.exists(path):
+        return LinearCostModel.load(path)
+    builder = seeds.ANALYTIC_SEEDS.get(device)
+    if builder is not None:
+        return builder()
+    raise UnknownDeviceError(device, list_models(registry_dir))
+
+
+def list_models(registry_dir: Optional[str] = None) -> Dict[str, str]:
+    """Every loadable device name -> "fitted" | "analytic".  A fitted file
+    shadows an analytic seed of the same name (as in ``load_model``)."""
+    registry_dir = registry_dir or default_registry_dir()
+    out: Dict[str, str] = {n: "analytic" for n in seeds.ANALYTIC_SEEDS}
+    if os.path.isdir(registry_dir):
+        for fn in sorted(os.listdir(registry_dir)):
+            if not fn.endswith(".json"):
+                continue
+            path = os.path.join(registry_dir, fn)
+            try:
+                with open(path) as f:
+                    d = json.load(f)
+                LinearCostModel.from_json_dict(d)
+            except (OSError, ValueError, KeyError):
+                continue  # not a readable model file; skip, don't crash
+            out[fn[:-len(".json")]] = "fitted"
+    return out
+
+
+def resolve_model(model, default: str = "tpu-v5e",
+                  registry_dir: Optional[str] = None) -> LinearCostModel:
+    """Normalize a model argument: ``None`` -> the ``default`` *analytic*
+    seed (deterministic — a fitted file never shadows the None default),
+    ``str`` -> registry lookup (fitted shadows analytic), and a
+    ``LinearCostModel`` passes through.
+
+    Same rules as ``core.predictor.resolve_model`` (which the plan-search /
+    straggler / elastic layers call), plus the ``registry_dir`` override.
+    """
+    if model is None:
+        builder = seeds.ANALYTIC_SEEDS.get(default)
+        if builder is None:
+            raise UnknownDeviceError(default, list_models(registry_dir))
+        return builder()
+    if isinstance(model, str):
+        return load_model(model, registry_dir)
+    if isinstance(model, LinearCostModel):
+        return model
+    raise TypeError(f"expected model name, LinearCostModel or None; "
+                    f"got {type(model).__name__}")

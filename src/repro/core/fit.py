@@ -8,7 +8,8 @@ which is ordinary least squares on the property matrix with row j scaled by
 1/T_j and unit targets.  We solve it with numpy lstsq; a small ridge term is
 available (useful when the runtime device collapses rate distinctions the
 taxonomy keeps separate — e.g. a CPU has no coalescing cliff, so stride
-columns become near-collinear; see EXPERIMENTS.md §Paper), as is projected
+columns become near-collinear; see EXPERIMENTS.md, "Caveats: ridge and
+NNLS"), as is projected
 non-negative refinement (the paper's fitted weights may legitimately be
 negative — Table 2 has negative local-load and min(L,S) entries — so NNLS
 is *off* by default).

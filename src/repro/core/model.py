@@ -15,6 +15,15 @@ import numpy as np
 
 from repro.core import properties as props
 
+# Registry file-format version (see repro.calibration.registry).  v1 adds the
+# explicit "schema"/"kind" envelope; files without it are legacy v0 and are
+# accepted by ``from_json_dict`` for backward compatibility.
+SCHEMA_VERSION = 1
+
+
+class ModelSchemaError(ValueError):
+    """A serialized model has an unreadable or future schema."""
+
 
 @dataclass
 class LinearCostModel:
@@ -57,21 +66,45 @@ class LinearCostModel:
         return "\n".join(lines)
 
     # ------------------------------------------------------------------
+    def to_json_dict(self) -> Dict[str, object]:
+        """Versioned JSON envelope.  ``json`` emits float64 via ``repr``
+        (shortest exact form), so weights round-trip bitwise."""
+        return {
+            "schema": SCHEMA_VERSION,
+            "kind": "linear_cost_model",
+            "device": self.device,
+            "keys": list(self.keys),
+            "weights": [float(w) for w in self.weights],
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping[str, object]) -> "LinearCostModel":
+        schema = d.get("schema", 0)  # pre-versioning files are legacy v0
+        if not isinstance(schema, int) or schema > SCHEMA_VERSION:
+            raise ModelSchemaError(
+                f"model schema {schema!r} is newer than supported "
+                f"({SCHEMA_VERSION}); upgrade this checkout to read it")
+        if schema >= 1 and d.get("kind") != "linear_cost_model":
+            raise ModelSchemaError(
+                f"not a linear_cost_model record: kind={d.get('kind')!r}")
+        keys = list(d["keys"])
+        weights = np.asarray(d["weights"], dtype=np.float64)
+        if len(keys) != len(weights):
+            raise ModelSchemaError(
+                f"{len(keys)} keys but {len(weights)} weights")
+        return cls(keys=keys, weights=weights,
+                   device=str(d.get("device", "unknown")),
+                   meta=dict(d.get("meta", {})))
+
     def save(self, path: str) -> None:
         with open(path, "w") as f:
-            json.dump({
-                "device": self.device,
-                "keys": self.keys,
-                "weights": [float(w) for w in self.weights],
-                "meta": self.meta,
-            }, f, indent=1)
+            json.dump(self.to_json_dict(), f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "LinearCostModel":
         with open(path) as f:
-            d = json.load(f)
-        return cls(keys=d["keys"], weights=np.asarray(d["weights"]),
-                   device=d.get("device", "unknown"), meta=d.get("meta", {}))
+            return cls.from_json_dict(json.load(f))
 
     @classmethod
     def from_dict(cls, weights: Mapping[str, float], device: str = "analytic",

@@ -23,7 +23,7 @@ This predictor powers:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
@@ -77,6 +77,28 @@ def tpu_v5e_weights() -> LinearCostModel:
 
 # ---------------------------------------------------------------------------
 
+#: what every prediction entry point accepts: an in-memory model, a registry
+#: device name (resolved via ``repro.calibration``), or None (v5e seed).
+ModelLike = Union[LinearCostModel, str, None]
+
+
+def resolve_model(model: ModelLike) -> LinearCostModel:
+    """Normalize a model argument.  ``None`` is the deterministic default —
+    the built-in analytic v5e seed, never a registry file; a string is a
+    registry device name (where a fitted model shadows a same-named seed).
+    ``repro.calibration.registry.resolve_model`` applies the same rules with
+    an explicit registry-directory override."""
+    if model is None:
+        return tpu_v5e_weights()
+    if isinstance(model, LinearCostModel):
+        return model
+    if isinstance(model, str):
+        # calibration sits above core — import lazily at call time only
+        from repro.calibration import registry
+        return registry.load_model(model)
+    raise TypeError(f"expected model name, LinearCostModel or None; "
+                    f"got {type(model).__name__}")
+
 
 @dataclass
 class StepPrediction:
@@ -94,24 +116,52 @@ def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
     return {"B": shape.global_batch, "S": shape.seq_len, "M": microbatches}
 
 
+def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
+                         mesh_shape: Mapping[str, int],
+                         _count_cache: Optional[dict] = None,
+                         _sc=None) -> Dict[str, float]:
+    """The concrete per-device property vector for one (plan, mesh) cell.
+
+    ``_count_cache`` memoizes the expensive symbolic-count evaluation across
+    plans that share (remat_policy, microbatches) — the batched scorer passes
+    one cache over the whole candidate set, so an autoshard sweep evaluates
+    the per-arch counts once per distinct schedule, not once per plan.
+    ``_sc`` lets a caller that already built the ``StepCounts`` (e.g.
+    ``predict_step``, which also needs ``concrete_model_flops``) avoid
+    rebuilding them.
+    """
+    n_dev = int(np.prod(list(mesh_shape.values()))) or 1
+    env = _env_for(shape, plan.microbatches)
+
+    ck = (plan.remat_policy, plan.microbatches)
+    cached = _count_cache.get(ck) if _count_cache is not None else None
+    if cached is None:
+        sc = _sc or archcount.counts_for(cfg, shape.kind,
+                                         remat_policy=plan.remat_policy)
+        cached = sc.concrete(env)
+        if _count_cache is not None:
+            _count_cache[ck] = cached
+    # compute/memory events divide over the mesh (SPMD work division)
+    pv = {k: v / n_dev for k, v in cached.items()}
+    coll = archcount.collective_counts(cfg, shape.kind, plan, mesh_shape)
+    from repro.core.symcount import evaluate_vector
+    pv.update(evaluate_vector(coll, env))
+    pv[props.CONST1] = 1.0
+    return pv
+
+
 def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
                  mesh_shape: Mapping[str, int],
-                 weights: Optional[LinearCostModel] = None,
+                 weights: ModelLike = None,
                  ) -> StepPrediction:
     """Predict one step's wall time on ``mesh_shape`` under ``plan``."""
-    weights = weights or tpu_v5e_weights()
+    weights = resolve_model(weights)
     n_dev = int(np.prod(list(mesh_shape.values()))) or 1
     env = _env_for(shape, plan.microbatches)
 
     sc = archcount.counts_for(cfg, shape.kind,
                               remat_policy=plan.remat_policy)
-    pv = sc.concrete(env)
-    # compute/memory events divide over the mesh (SPMD work division)
-    pv = {k: v / n_dev for k, v in pv.items()}
-    coll = archcount.collective_counts(cfg, shape.kind, plan, mesh_shape)
-    from repro.core.symcount import evaluate_vector
-    pv.update(evaluate_vector(coll, env))
-    pv[props.CONST1] = 1.0
+    pv = plan_property_vector(cfg, shape, plan, mesh_shape, _sc=sc)
 
     bd = weights.breakdown(pv)
     total = sum(bd.values())
@@ -131,15 +181,38 @@ def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
                           model_flops=mf, mfu=mfu)
 
 
+def predict_plans(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+                  mesh_shape: Mapping[str, int],
+                  weights: ModelLike = None) -> np.ndarray:
+    """Batched step-time prediction: seconds for every candidate plan.
+
+    This is the plan-search hot path.  All candidate property vectors are
+    assembled once (sharing the symbolic-count cache across plans) and scored
+    with a single matrix–vector product (``LinearCostModel.predict_many``) —
+    hundreds of plans cost one small ``A @ w``, not a Python loop of
+    per-plan inner products.
+    """
+    weights = resolve_model(weights)
+    count_cache: dict = {}
+    pvs: List[Dict[str, float]] = [
+        plan_property_vector(cfg, shape, p, mesh_shape, count_cache)
+        for p in plans]
+    if not pvs:
+        return np.zeros((0,))
+    return np.asarray(weights.predict_many(pvs), dtype=np.float64)
+
+
 def rank_plans(cfg: ArchConfig, shape: ShapeConfig, plans,
                mesh_shape: Mapping[str, int],
-               weights: Optional[LinearCostModel] = None):
+               weights: ModelLike = None):
     """Sort candidate plans by predicted step time (ascending) — the paper's
-    §6.2 'select the optimal set of kernel configurations', realized."""
-    scored = [(predict_step(cfg, shape, p, mesh_shape, weights).seconds, i, p)
-              for i, p in enumerate(plans)]
-    scored.sort(key=lambda t: (t[0], t[1]))
-    return [(s, p) for s, _, p in scored]
+    §6.2 'select the optimal set of kernel configurations', realized.
+
+    Scoring goes through the batched ``predict_plans`` path."""
+    secs = predict_plans(cfg, shape, plans, mesh_shape, weights)
+    scored = sorted(zip(secs, range(len(plans)), plans),
+                    key=lambda t: (t[0], t[1]))
+    return [(float(s), p) for s, _, p in scored]
 
 
 # ---------------------------------------------------------------------------

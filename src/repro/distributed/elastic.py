@@ -4,17 +4,18 @@
 Uses the fitted/analytic linear cost model (core/predictor.py) to rank the
 candidate meshes in microseconds — the paper's 'rapid evaluation' property
 is what makes in-failure-path re-planning viable at all (a compile-and-
-measure search would take minutes per candidate).
+measure search would take minutes per candidate).  The ``weights`` argument
+accepts a registry device name (``repro.calibration``) as well as an
+in-memory ``LinearCostModel``.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import predictor
-from repro.core.model import LinearCostModel
 from repro.distributed.plan import Plan, plan_for
 
 
@@ -38,7 +39,7 @@ def _factorizations(n: int) -> List[Tuple[int, int]]:
 
 
 def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
-           weights: Optional[LinearCostModel] = None,
+           weights: predictor.ModelLike = None,
            max_candidates: int = 64) -> List[MeshOption]:
     """Rank feasible (data × model) meshes for ``n_devices`` survivors.
 
@@ -48,6 +49,7 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
     non-divisible axes, so these plans still *lower*, they just waste the
     axis; the predictor prices that in).
     """
+    weights = predictor.resolve_model(weights)  # once, not per candidate
     opts: List[MeshOption] = []
     for dp, tp in _factorizations(n_devices)[:max_candidates]:
         if shape.kind == "train" and shape.global_batch % dp != 0:
@@ -62,7 +64,7 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
 
 
 def on_failure(cfg: ArchConfig, shape: ShapeConfig, prev_devices: int,
-               lost: int, weights: Optional[LinearCostModel] = None
+               lost: int, weights: predictor.ModelLike = None
                ) -> MeshOption:
     """Failure handler: fall back to the best mesh over the largest
     'round' (power-of-two) survivor count — spares become hot standbys,

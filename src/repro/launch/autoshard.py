@@ -2,26 +2,30 @@
 ('select the optimal set of kernel configurations'), realized at the
 distributed-plan level.
 
-Enumerates candidate ``Plan``s for an (arch × shape × mesh) cell and ranks
-them by the fitted/analytic linear model in microseconds per candidate (the
-paper's 'small inner product' evaluation speed is exactly what makes an
-exhaustive plan sweep cheap).  Optionally verifies the top-k candidates by
-actually lowering them (the expensive ground truth the model replaces).
+Enumerates candidate ``Plan``s for an (arch × shape × mesh) cell and scores
+them ALL with one batched matrix–vector product (``predictor.predict_plans``
+→ ``LinearCostModel.predict_many``) — the paper's 'small inner product'
+evaluation speed is exactly what makes an exhaustive plan sweep cheap.
+Optionally verifies the top-k candidates by actually lowering them (the
+expensive ground truth the model replaces).
+
+The cost model may be a registry device name (``--model cpu`` after running
+``python -m repro.calibration --device cpu``), defaulting to the analytic
+TPU-v5e seed.
 
     PYTHONPATH=src python -m repro.launch.autoshard --arch glm4-9b \
-        --shape train_4k
+        --shape train_4k --model tpu-v5e
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import itertools
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
 from repro.configs.registry import ARCHS
 from repro.core import predictor
-from repro.core.model import LinearCostModel
 from repro.distributed.plan import Plan, plan_for
 
 
@@ -56,13 +60,16 @@ def candidate_plans(cfg, shape: ShapeConfig, multi_pod: bool = False
 
 
 def search(arch: str, shape_name: str, *, multi_pod: bool = False,
-           weights: Optional[LinearCostModel] = None, top_k: int = 5
+           model: predictor.ModelLike = None, top_k: int = 5
            ) -> List[Tuple[float, Plan]]:
+    """Rank candidate plans under ``model`` (a ``LinearCostModel``, a
+    registry device name, or None for the analytic v5e seed)."""
     cfg = ARCHS[arch]
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         raise ValueError(why)
+    model = predictor.resolve_model(model)  # resolve once for the whole sweep
     mesh_shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
                   else {"data": 16, "model": 16})
     plans = candidate_plans(cfg, shape, multi_pod)
@@ -71,7 +78,7 @@ def search(arch: str, shape_name: str, *, multi_pod: bool = False,
     if not fits:  # degrade gracefully: report least-infeasible
         fits = sorted(plans, key=lambda p: predictor.estimate_peak_bytes(
             cfg, shape, p, mesh_shape))[:max(top_k, 8)]
-    ranked = predictor.rank_plans(cfg, shape, fits, mesh_shape, weights)
+    ranked = predictor.rank_plans(cfg, shape, fits, mesh_shape, model)
     return ranked[:top_k]
 
 
@@ -81,12 +88,20 @@ def main() -> None:
     ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--top", type=int, default=5)
+    ap.add_argument("--model", default=None,
+                    help="cost-model registry device name (default: the "
+                         "analytic tpu-v5e seed); see python -m "
+                         "repro.calibration --list")
     args = ap.parse_args()
 
     ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
-                    top_k=args.top)
+                    model=args.model, top_k=args.top)
+    # None resolves to the built-in analytic seed, which an explicit
+    # "--model tpu-v5e" does NOT (a fitted registry file would shadow it)
+    model_label = args.model or "tpu-v5e analytic seed"
     print(f"top-{args.top} plans for {args.arch} × {args.shape} "
-          f"({'2x16x16' if args.multi_pod else '16x16'}):")
+          f"({'2x16x16' if args.multi_pod else '16x16'}, "
+          f"model={model_label}):")
     for t, p in ranked:
         print(f"  {t*1e3:9.2f} ms  fsdp={p.fsdp} sp={p.sequence_parallel} "
               f"mb={p.microbatches} remat={p.remat_policy} "

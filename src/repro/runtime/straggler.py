@@ -3,7 +3,10 @@
 The monitor compares *observed* per-host step times against the cost
 model's *predicted* step time (core/predictor.py) — the paper's §6.1 'load
 balancing' application.  A host is a straggler when its EWMA exceeds
-``k × max(predicted, fleet median)``.
+``k × max(predicted, fleet median)``.  ``StragglerMonitor.from_model``
+derives the predicted step time from a cost model directly — an in-memory
+``LinearCostModel``, a registry device name (``repro.calibration``), or the
+analytic v5e seed.
 
 Mitigations (policy chosen by the trainer):
   * ``report``   — log only;
@@ -41,6 +44,19 @@ class StragglerMonitor:
     def __post_init__(self):
         if self._state is None:
             self._state = np.full(self.n_hosts, self.predicted_step_s)
+
+    @classmethod
+    def from_model(cls, cfg, shape, plan, mesh_shape, n_hosts: int,
+                   model=None, **kw) -> "StragglerMonitor":
+        """Build a monitor whose threshold is anchored to the cost model's
+        predicted step time for (cfg × shape × plan × mesh).
+
+        ``model`` is anything ``predictor.resolve_model`` accepts: None (the
+        analytic v5e seed), a registry device name, or a ``LinearCostModel``.
+        """
+        from repro.core import predictor  # runtime sits above core
+        pred = predictor.predict_step(cfg, shape, plan, mesh_shape, model)
+        return cls(n_hosts=n_hosts, predicted_step_s=pred.seconds, **kw)
 
     def threshold(self) -> float:
         return self.k * max(self.predicted_step_s,

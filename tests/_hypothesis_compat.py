@@ -1,0 +1,37 @@
+"""Optional-``hypothesis`` shim so the tier-1 suite collects on a bare
+environment (numpy + jax + pytest only).
+
+``from _hypothesis_compat import given, settings, st`` behaves exactly like
+the real hypothesis imports when the package is installed; otherwise the
+decorators turn each property-based test into a single skipped test and the
+strategy expressions evaluate to inert placeholders.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategies:
+        """Any ``st.<name>(...)`` call returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed — property-based cases "
+                       "skipped")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
