@@ -26,6 +26,7 @@ from repro.configs.registry import ARCHS
 from repro.core import extract as cx
 from repro.distributed.plan import plan_for
 from repro.distributed.sharding import use_sharding
+from repro.kernels import autotune
 from repro.kernels import flash_attention as fa
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import step_and_specs
@@ -67,8 +68,14 @@ def analyse(arch: str = "glm4-9b", shape_name: str = "prefill_32k"):
     bytes_elem = 2  # bf16 streams
     hbm_stream = (B * S * (2 * H + 4 * KVH) * dh * bytes_elem) * n_attn \
         * passes / n_dev
+    # model-chosen tiling: the same sweep block_sizes="auto" kernels run
+    blocks = autotune.best_block_sizes("flash_attention", {
+        "B": B, "H": H, "KVH": KVH, "Sq": S, "Skv": S, "dh": dh,
+        "causal": True, "window": cfg.sliding_window, "bits": 16})
     props = fa.schedule_props(B, H, KVH, S, S, dh, causal=True,
-                              window=cfg.sliding_window)
+                              window=cfg.sliding_window,
+                              block_q=blocks["block_q"],
+                              block_k=blocks["block_k"])
     kernel_flops = props["mxu:16"] * n_attn * (2.5 if shape.kind == "train"
                                                else 1.0) / n_dev
     vmem_bytes = props["local:16:load"] * 2 * n_attn * passes / n_dev
@@ -87,6 +94,7 @@ def analyse(arch: str = "glm4-9b", shape_name: str = "prefill_32k"):
 
     out = {
         "arch": arch, "shape": shape_name, "n_devices": int(n_dev),
+        "autotuned_blocks": blocks,
         "attention_attributable": {"flops": attn_flops, "bytes": attn_bytes},
         "kernel_attention": {"flops": kernel_flops,
                              "hbm_bytes": hbm_stream,

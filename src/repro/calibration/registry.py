@@ -95,10 +95,25 @@ def list_models(registry_dir: Optional[str] = None) -> Dict[str, str]:
                 with open(path) as f:
                     d = json.load(f)
                 LinearCostModel.from_json_dict(d)
-            except (OSError, ValueError, KeyError):
+            except (OSError, ValueError, KeyError, TypeError, AttributeError):
                 continue  # not a readable model file; skip, don't crash
             out[fn[:-len(".json")]] = "fitted"
     return out
+
+
+def fingerprint(device: str, registry_dir: Optional[str] = None):
+    """Cache-key stamp for ``device``'s registry state: (registry dir,
+    fitted-file mtime or None).  Changes whenever a recalibration rewrites
+    the fitted model or the registry dir is redirected — callers memoizing
+    per-device results (e.g. the kernel autotuner) key on this so they
+    never serve conclusions from a superseded model."""
+    registry_dir = registry_dir or default_registry_dir()
+    path = _model_path(registry_dir, device)
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        mtime = None
+    return (registry_dir, mtime)
 
 
 def resolve_model(model, default: str = "tpu-v5e",

@@ -239,13 +239,20 @@ def forward_counts(cfg: ArchConfig) -> Dict[str, ExprLike]:
     return pv
 
 
+def train_fwd_multiplier(cfg: ArchConfig,
+                         remat_policy: Optional[str] = None) -> float:
+    """fwd+bwd compute multiplier: bwd ≈ 2× fwd MXU flops, and full remat
+    re-runs the forward once more inside bwd."""
+    policy = remat_policy or cfg.remat_policy
+    return 3.0 + (1.0 if policy in ("full", "nothing") else 0.0)
+
+
 def train_counts(cfg: ArchConfig,
                  remat_policy: Optional[str] = None) -> StepCounts:
     """fwd + bwd + optimizer.  bwd ≈ 2× fwd MXU flops; full remat re-runs
     the forward once more inside bwd."""
-    policy = remat_policy or cfg.remat_policy
     fwd = forward_counts(cfg)
-    mult = 3.0 + (1.0 if policy in ("full", "nothing") else 0.0)
+    mult = train_fwd_multiplier(cfg, remat_policy)
     pv = scale_vector(fwd, mult)
     bits = _bits(cfg)
     Np = cfg.n_params()

@@ -316,10 +316,15 @@ def _comp_costs(mod: HloModule, name: str,
                 out.add(best)
             continue
         if op in ("call", "async-start"):
+            # callee costs only: the callee's ROOT already paid for the
+            # result bytes, and a call site materializes nothing extra.
+            # (This matters inside while/scan bodies, where XLA wraps the
+            # per-step dynamic-slice of a scanned parameter stack in a
+            # parallel call — recounting the call output here billed the
+            # slice an extra time on EVERY trip.)
             for b in ins.called():
                 if b in mod.computations:
                     out.add(_comp_costs(mod, b, memo))
-            out.bytes += ins.bytes_out
             continue
         base = op[:-6] if op.endswith("-start") else op
         if op.endswith("-done"):

@@ -1,0 +1,416 @@
+"""Kernel-level symbolic property vectors — the per-kernel unit of
+prediction (paper §6.2, and the follow-up cross-machine models).
+
+Where ``core.archcount`` emits one property vector per *training step*,
+this module emits one per *Pallas kernel launch*, parameterized over both
+the problem shape AND the launch configuration (block/tile sizes) as
+``symcount`` variables.  That makes a block-size sweep a pure array
+evaluation: compile each property once (``Expr.compile``), feed the whole
+candidate grid as numpy arrays, and score every configuration through a
+fitted ``LinearCostModel`` with a handful of ufuncs — no per-point Python
+tree-walks, no kernel launches.
+
+Per kernel we count (mirroring the concrete ``schedule_props`` in
+``repro.kernels.*``, but closed-form in the block variables):
+
+  * ``mxu:<bits>``    — dot MACs×2 at *block-rounded* granularity, so a
+                        block that overshoots the shape pays for its padding
+                        (the real kernel does too);
+  * ``local:<bits>``  — VMEM block traffic per grid cell;
+  * ``barrier``       — grid steps (sequential-dimension synchronisations);
+  * ``groups``        — parallel grid cells (launch/occupancy proxy);
+  * ``const1``        — 1 per launch.
+
+The causal / sliding-window skip structure of flash attention is priced
+with exact closed forms where they exist (square-block causal triangle) and
+documented closed-form bounds otherwise — the tuner only needs the vector
+family to be *self-consistent* across the candidate grid.
+
+``step_kernel_vectors`` recomposes a whole forward pass out of these
+per-kernel vectors (projections/FFN/head → matmul, attention → flash,
+SSD → ssd_scan), which is what ``core.predictor`` now uses for its compute
+term — the step predictor and the kernel autotuner score the SAME counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import properties as props
+from repro.core.symcount import (
+    CeilDiv, Const, Expr, ExprLike, Max, Min, Var, add_vectors, as_expr,
+    compile_vector, evaluate_vector, scale_vector,
+)
+
+# Free variables of the step-level composition (same names as archcount)
+B = Var("B")   # global batch
+S = Var("S")   # sequence length
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel symbolic property vectors
+# ---------------------------------------------------------------------------
+
+
+def matmul_vector(M: ExprLike, N: ExprLike, K: ExprLike, *,
+                  block_m: ExprLike = 128, block_n: ExprLike = 128,
+                  block_k: ExprLike = 128, bits: int = 32
+                  ) -> Dict[str, ExprLike]:
+    """(M,K)@(K,N) tiled matmul: (bm×bk)+(bk×bn) tiles stream HBM→VMEM per
+    grid cell, fp32 (bm×bn) accumulator carried across the sequential k
+    walk."""
+    M, N, K = as_expr(M), as_expr(N), as_expr(K)
+    bm, bn, bk = as_expr(block_m), as_expr(block_n), as_expr(block_k)
+    n_m, n_n, n_k = CeilDiv(M, bm), CeilDiv(N, bn), CeilDiv(K, bk)
+    cells = n_m * n_n * n_k
+    local = cells * (bm * bk + bk * bn + bm * bn)
+    return {
+        props.local_key(bits): local,
+        props.BARRIER: cells,
+        props.GROUPS: n_m * n_n,
+        props.mxu_key(bits): 2 * cells * bm * bn * bk,
+        props.CONST1: 1.0,
+    }
+
+
+def _fa_exec_blocks(n_q: Expr, n_k: Expr, *, causal: bool,
+                    window: Optional[int], block_q: ExprLike,
+                    block_k: ExprLike) -> Expr:
+    """Executed (non-skipped) (q-block, k-block) pairs per (batch, head).
+
+    causal: ceil((n_q·n_k + max(n_q, n_k)) / 2) — exact for the square
+    case (block_q == block_k, Sq == Skv): triangle + diagonal.
+    window w: at most ceil(w / block_k) + 1 k-blocks intersect a q-row's
+    band; combined with causal by taking the tighter bound.
+    """
+    full = n_q * n_k
+    execd = full
+    if causal:
+        execd = CeilDiv(full + Max(n_q, n_k), Const(2))
+    if window is not None:
+        band = Min(n_k, CeilDiv(Const(window), as_expr(block_k)) + 1)
+        execd = Min(execd, n_q * band)
+    return execd
+
+
+def flash_attention_vector(B_: ExprLike, H: ExprLike, KVH: ExprLike,
+                           Sq: ExprLike, Skv: ExprLike, dh: ExprLike, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           block_q: ExprLike = 128, block_k: ExprLike = 128,
+                           bits: int = 16) -> Dict[str, ExprLike]:
+    """Online-softmax attention: q/k/v tiles stream per executed pair; the
+    (bq×bk) logit tile never leaves VMEM; fully-masked pairs are skipped
+    (but their grid steps still barrier)."""
+    bq, bk = as_expr(block_q), as_expr(block_k)
+    n_q, n_k = CeilDiv(as_expr(Sq), bq), CeilDiv(as_expr(Skv), bk)
+    cells = as_expr(B_) * as_expr(H) * n_q * n_k
+    execd = _fa_exec_blocks(n_q, n_k, causal=causal, window=window,
+                            block_q=bq, block_k=bk)
+    exec_cells = as_expr(B_) * as_expr(H) * execd
+    local = exec_cells * (bq * as_expr(dh) + 2 * bk * as_expr(dh))
+    return {
+        props.local_key(bits): local,
+        props.BARRIER: cells,
+        props.GROUPS: cells,
+        props.mxu_key(bits): 4 * exec_cells * bq * bk * as_expr(dh),
+        props.CONST1: 1.0,
+    }
+
+
+def ssd_scan_vector(Bz: ExprLike, H: ExprLike, L: ExprLike, P: ExprLike,
+                    N: ExprLike, *, chunk: ExprLike = 128, bits: int = 16
+                    ) -> Dict[str, ExprLike]:
+    """Chunked SSD: per (batch, head, chunk) cell the x/B/C blocks move
+    HBM→VMEM and the (P×N) state stays VMEM-resident.  Intra-chunk work is
+    quadratic in the chunk; the state update is paid once per chunk — the
+    block-size tradeoff the tuner balances."""
+    Q = as_expr(chunk)
+    nc = CeilDiv(as_expr(L), Q)
+    cells = as_expr(Bz) * as_expr(H) * nc
+    local = cells * (Q * as_expr(P) + 2 * Q * as_expr(N)
+                     + as_expr(P) * as_expr(N))
+    mxu = cells * 2 * (Q * Q * as_expr(N)          # C·Bᵀ
+                       + Q * Q * as_expr(P)        # W·x (intra)
+                       + Q * as_expr(P) * as_expr(N) * 2)  # inter + state
+    return {
+        props.local_key(bits): local,
+        props.BARRIER: cells,
+        props.GROUPS: cells,
+        props.mxu_key(bits): mxu,
+        props.CONST1: 1.0,
+    }
+
+
+def transpose_vector(M: ExprLike, N: ExprLike, *, block: ExprLike = 256,
+                     bits: int = 32) -> Dict[str, ExprLike]:
+    """VMEM-tile relayout: each (b×b) tile passes through VMEM twice
+    (stream in, stream out) so both HBM directions stay stride-1."""
+    b = as_expr(block)
+    bm, bn = Min(b, as_expr(M)), Min(b, as_expr(N))
+    cells = CeilDiv(as_expr(M), bm) * CeilDiv(as_expr(N), bn)
+    return {
+        props.local_key(bits): cells * 2 * bm * bn,
+        props.BARRIER: cells,
+        props.GROUPS: cells,
+        props.CONST1: 1.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry — shape/block parameter spaces + VMEM footprints
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 2 ** 20   # v5e VMEM per core
+VMEM_BUDGET = 0.75          # leave headroom for compiler temporaries
+
+
+def _pow2_divisors(n: int, lo: int, hi: int) -> List[int]:
+    out, b = [], lo
+    while b <= min(n, hi):
+        if n % b == 0:
+            out.append(b)
+        b *= 2
+    return out or [min(n, hi)]
+
+
+@dataclass(frozen=True)
+class KernelModel:
+    """One kernel family: symbolic vector builder + its config space."""
+    name: str
+    shape_params: Tuple[str, ...]
+    block_params: Tuple[str, ...]
+    #: (shape, blocks) -> Dict[str, ExprLike]; entries of either mapping may
+    #: be symcount Exprs, so one builder serves sweeps and step composition
+    builder: Callable[..., Dict[str, ExprLike]]
+    #: shape -> list of concrete candidate block dicts (pre-VMEM-filter)
+    candidates: Callable[[Mapping[str, int]], List[Dict[str, int]]]
+    #: (shape, blocks) -> concrete VMEM bytes for feasibility filtering
+    vmem_bytes: Callable[[Mapping[str, int], Mapping[str, int]], float]
+
+    def vector(self, shape: Mapping[str, ExprLike],
+               blocks: Mapping[str, ExprLike]) -> Dict[str, ExprLike]:
+        return self.builder(shape, blocks)
+
+    def symbolic_blocks(self) -> Dict[str, Var]:
+        return {b: Var(b) for b in self.block_params}
+
+
+def _mm_builder(shape, blocks):
+    return matmul_vector(shape["M"], shape["N"], shape["K"],
+                         block_m=blocks["block_m"], block_n=blocks["block_n"],
+                         block_k=blocks["block_k"],
+                         bits=int(shape.get("bits", 32)))
+
+
+def _mm_candidates(shape):
+    return [{"block_m": bm, "block_n": bn, "block_k": bk}
+            for bm in _pow2_divisors(int(shape["M"]), 32, 512)
+            for bn in _pow2_divisors(int(shape["N"]), 32, 512)
+            for bk in _pow2_divisors(int(shape["K"]), 32, 512)]
+
+
+def _mm_vmem(shape, blocks):
+    by = int(shape.get("bits", 32)) // 8
+    bm, bn, bk = blocks["block_m"], blocks["block_n"], blocks["block_k"]
+    return (bm * bk + bk * bn) * by + bm * bn * (4 + by)  # tiles + f32 acc
+
+
+def _fa_builder(shape, blocks):
+    return flash_attention_vector(
+        shape["B"], shape["H"], shape["KVH"], shape["Sq"], shape["Skv"],
+        shape["dh"], causal=bool(shape.get("causal", True)),
+        window=shape.get("window"), block_q=blocks["block_q"],
+        block_k=blocks["block_k"], bits=int(shape.get("bits", 16)))
+
+
+def _fa_candidates(shape):
+    return [{"block_q": bq, "block_k": bk}
+            for bq in _pow2_divisors(int(shape["Sq"]), 32, 512)
+            for bk in _pow2_divisors(int(shape["Skv"]), 32, 512)]
+
+
+def _fa_vmem(shape, blocks):
+    by = int(shape.get("bits", 16)) // 8
+    dh = int(shape["dh"])
+    bq, bk = blocks["block_q"], blocks["block_k"]
+    # q/k/v tiles + (m, l, acc) f32 scratch + the (bq×bk) logit tile
+    return ((bq + 2 * bk) * dh * by + (2 * bq + bq * dh) * 4
+            + bq * bk * 4)
+
+
+def _ssd_builder(shape, blocks):
+    return ssd_scan_vector(shape["Bz"], shape["H"], shape["L"], shape["P"],
+                           shape["N"], chunk=blocks["chunk"],
+                           bits=int(shape.get("bits", 16)))
+
+
+def _ssd_candidates(shape):
+    return [{"chunk": c} for c in _pow2_divisors(int(shape["L"]), 16, 256)]
+
+
+def _ssd_vmem(shape, blocks):
+    by = int(shape.get("bits", 16)) // 8
+    P, N = int(shape["P"]), int(shape["N"])
+    Q = blocks["chunk"]
+    # x/dt/B/C tiles + f32 state + the three (Q×Q) f32 intermediates
+    return (Q * (P + 2 * N + 1) * by + P * N * 4 + 3 * Q * Q * 4)
+
+
+def _tr_builder(shape, blocks):
+    return transpose_vector(shape["M"], shape["N"], block=blocks["block"],
+                            bits=int(shape.get("bits", 32)))
+
+
+def _tr_candidates(shape):
+    M, N = int(shape["M"]), int(shape["N"])
+    blocks = sorted(set(_pow2_divisors(M, 32, 512))
+                    & set(_pow2_divisors(N, 32, 512))) \
+        or sorted(set(_pow2_divisors(M, 32, 512))
+                  | set(_pow2_divisors(N, 32, 512)))
+    return [{"block": b} for b in blocks]
+
+
+def _tr_vmem(shape, blocks):
+    by = int(shape.get("bits", 32)) // 8
+    b = blocks["block"]
+    return 2 * b * b * by
+
+
+KERNELS: Dict[str, KernelModel] = {
+    "matmul": KernelModel(
+        "matmul", ("M", "N", "K"), ("block_m", "block_n", "block_k"),
+        _mm_builder, _mm_candidates, _mm_vmem),
+    "flash_attention": KernelModel(
+        "flash_attention", ("B", "H", "KVH", "Sq", "Skv", "dh"),
+        ("block_q", "block_k"), _fa_builder, _fa_candidates, _fa_vmem),
+    "ssd_scan": KernelModel(
+        "ssd_scan", ("Bz", "H", "L", "P", "N"), ("chunk",),
+        _ssd_builder, _ssd_candidates, _ssd_vmem),
+    "transpose": KernelModel(
+        "transpose", ("M", "N"), ("block",),
+        _tr_builder, _tr_candidates, _tr_vmem),
+}
+
+
+def get(kernel) -> KernelModel:
+    if isinstance(kernel, KernelModel):
+        return kernel
+    try:
+        return KERNELS[kernel]
+    except KeyError:
+        raise KeyError(f"unknown kernel {kernel!r}; "
+                       f"known: {sorted(KERNELS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Step-level composition — the predictor's compute term, per kernel
+# ---------------------------------------------------------------------------
+
+
+def _attn_matmul_shapes(cfg) -> List[Tuple[ExprLike, ExprLike, ExprLike]]:
+    """Dense projection matmuls of one attention layer, (M, N, K) with the
+    token dim symbolic."""
+    T = B * S
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return [(T, H * hd, d), (T, KV * hd, d), (T, KV * hd, d), (T, d, H * hd)]
+
+
+def _ffn_matmul_shapes(cfg) -> List[Tuple[ExprLike, ExprLike, ExprLike]]:
+    T = B * S
+    return [(T, cfg.d_ff, cfg.d_model), (T, cfg.d_ff, cfg.d_model),
+            (T, cfg.d_model, cfg.d_ff)]
+
+
+def step_kernel_vectors(cfg, kind: str = "train") -> Dict[str, Dict[str, ExprLike]]:
+    """Per-kernel symbolic property vectors for ONE forward pass of ``cfg``
+    over (B, S) tokens, at the kernels' default block sizes.
+
+    Returns ``{kernel_name: property_vector}`` with the same free variables
+    as ``archcount`` (B, S).  The composition mirrors
+    ``archcount._layer_macs`` contraction-for-contraction, so the mxu totals
+    agree in the leading term; kernel-level block rounding and the VMEM
+    (``local:``) traffic are what this granularity adds.  Contractions with
+    no Pallas kernel (MoE dispatch einsum, the SSM short conv, embedding
+    gather) stay with archcount's step counts and are NOT counted here.
+    """
+    from repro.core import archcount  # late import: archcount is heavier
+    bits = 16 if "16" in cfg.compute_dtype else 32
+    T = B * S
+    L = cfg.n_layers
+    out: Dict[str, Dict[str, ExprLike]] = {}
+
+    mm_shapes: List[Tuple[ExprLike, ExprLike, ExprLike, float]] = []
+    n_attn = 0
+    if cfg.family == "ssm":
+        n_ssm = L
+    elif cfg.family == "hybrid":
+        n_ssm = L
+        n_attn = L // cfg.hybrid.attn_every
+    else:
+        n_ssm = 0
+        n_attn = L
+
+    if n_attn:
+        for (m, n, k) in _attn_matmul_shapes(cfg):
+            mm_shapes.append((m, n, k, float(n_attn)))
+        if cfg.moe is not None:
+            active = cfg.moe.top_k * cfg.moe.capacity_factor
+            for (m, n, k) in _ffn_matmul_shapes(cfg):
+                mm_shapes.append((m, n, k, float(n_attn) * active))
+        else:
+            for (m, n, k) in _ffn_matmul_shapes(cfg):
+                mm_shapes.append((m, n, k, float(n_attn)))
+    if n_ssm:
+        s = cfg.ssm
+        d, din = cfg.d_model, cfg.d_inner
+        G, N = s.n_groups, s.d_state
+        # in_proj (x, z, B, C, dt) + out_proj
+        mm_shapes.append((T, 2 * din + 2 * G * N + cfg.ssm_heads, d,
+                          float(n_ssm)))
+        mm_shapes.append((T, d, din, float(n_ssm)))
+    # LM head
+    mm_shapes.append((T, cfg.vocab_size * cfg.n_output_heads, cfg.d_model,
+                      1.0))
+
+    mm_pv: Dict[str, ExprLike] = {}
+    for (m, n, k, mult) in mm_shapes:
+        mm_pv = add_vectors(mm_pv, scale_vector(
+            matmul_vector(m, n, k, bits=bits), mult))
+    out["matmul"] = mm_pv
+
+    if n_attn:
+        out["flash_attention"] = scale_vector(
+            flash_attention_vector(B, cfg.n_heads, cfg.n_kv_heads, S, S,
+                                   cfg.head_dim_, causal=True,
+                                   window=cfg.sliding_window, bits=bits),
+            float(n_attn))
+    if n_ssm:
+        s = cfg.ssm
+        out["ssd_scan"] = scale_vector(
+            ssd_scan_vector(B, cfg.ssm_heads, S, s.head_dim, s.d_state,
+                            chunk=s.chunk, bits=bits),
+            float(n_ssm))
+
+    # contractions with no Pallas kernel: keep their archcount-style MAC
+    # closed forms so the kernel-composed mxu total replaces the step count
+    # without dropping terms (MoE dense dispatch/combine, SSM short conv)
+    extra = as_expr(0)
+    if n_attn and cfg.moe is not None:
+        extra = extra + archcount._moe_dispatch_macs(cfg) * float(n_attn)
+    if n_ssm:
+        s = cfg.ssm
+        extra = extra + float((cfg.d_inner + 2 * s.n_groups * s.d_state)
+                              * s.d_conv * n_ssm)
+    if not (isinstance(extra, Const) and extra.v == 0):
+        out["unkernelized"] = {props.mxu_key(bits): 2 * extra * T}
+    return out
+
+
+def step_compute_vector(cfg, kind: str = "train") -> Dict[str, ExprLike]:
+    """The summed compute-side (mxu + VMEM local) vector of one forward
+    pass, built from the per-kernel vectors.  barrier/groups/const1 stay at
+    STEP granularity (archcount's), not per-launch — a fitted per-launch
+    barrier weight does not add up across thousands of fused launches."""
+    total = add_vectors(*step_kernel_vectors(cfg, kind).values())
+    keep = ("mxu:", "local:")
+    return {k: v for k, v in total.items() if k.startswith(keep)}

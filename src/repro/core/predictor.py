@@ -86,18 +86,13 @@ def resolve_model(model: ModelLike) -> LinearCostModel:
     """Normalize a model argument.  ``None`` is the deterministic default —
     the built-in analytic v5e seed, never a registry file; a string is a
     registry device name (where a fitted model shadows a same-named seed).
-    ``repro.calibration.registry.resolve_model`` applies the same rules with
-    an explicit registry-directory override."""
-    if model is None:
-        return tpu_v5e_weights()
-    if isinstance(model, LinearCostModel):
-        return model
-    if isinstance(model, str):
-        # calibration sits above core — import lazily at call time only
-        from repro.calibration import registry
-        return registry.load_model(model)
-    raise TypeError(f"expected model name, LinearCostModel or None; "
-                    f"got {type(model).__name__}")
+
+    Delegates to ``repro.calibration.registry.resolve_model`` (the single
+    home of these rules; its ``"tpu-v5e"`` default seed IS
+    ``tpu_v5e_weights``), imported lazily because calibration sits above
+    core."""
+    from repro.calibration import registry
+    return registry.resolve_model(model)
 
 
 @dataclass
@@ -114,6 +109,53 @@ def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
         return {"B": shape.global_batch, "S": shape.seq_len,
                 "M": microbatches}
     return {"B": shape.global_batch, "S": shape.seq_len, "M": microbatches}
+
+
+# ---------------------------------------------------------------------------
+# Compiled step vectors — kernel-granularity compute terms
+# ---------------------------------------------------------------------------
+
+#: (cfg, kind, remat_policy) -> symcount.CompiledVector.  Step vectors are
+#: pure functions of those three; compiling once and evaluating per-env
+#: replaces the per-plan interpreted tree-walks in every plan search.
+_STEP_PV_CACHE: Dict[tuple, object] = {}
+
+
+def step_vector_fn(cfg: ArchConfig, kind: str,
+                   remat_policy: Optional[str] = None, _sc=None):
+    """Compiled symbolic property vector for one step of ``cfg``.
+
+    For train/prefill the compute terms come from the PER-KERNEL property
+    vectors (``core.kernelmodel.step_kernel_vectors``): the mxu count is the
+    block-rounded sum over the step's matmul / flash-attention / ssd_scan
+    launches (plus unkernelized contractions), and the kernels' VMEM
+    (``local:``) traffic joins the vector — the same counts the block-size
+    autotuner scores.  Memory / VPU / optimizer / structural terms stay at
+    archcount's step granularity, as does everything for decode (its cache-
+    streaming attention has no Pallas kernel here).
+    """
+    from repro.core import kernelmodel
+    from repro.core.symcount import as_expr, compile_vector
+    key = (cfg, kind, remat_policy)
+    cv = _STEP_PV_CACHE.get(key)
+    if cv is None:
+        sc = _sc or archcount.counts_for(cfg, kind,
+                                         remat_policy=remat_policy)
+        pv_sym = dict(sc.pv)
+        if kind in ("train", "prefill"):
+            mult = archcount.train_fwd_multiplier(cfg, remat_policy) \
+                if kind == "train" else 1.0
+            kpv = kernelmodel.step_compute_vector(cfg, kind)
+            for k, v in kpv.items():
+                scaled = as_expr(v) * mult
+                if k.startswith("mxu:"):
+                    pv_sym[k] = scaled          # replaces the step count
+                else:
+                    pv_sym[k] = scaled + as_expr(pv_sym[k]) \
+                        if k in pv_sym else scaled
+        cv = compile_vector(pv_sym)
+        _STEP_PV_CACHE[key] = cv
+    return cv
 
 
 def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
@@ -136,9 +178,10 @@ def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
     ck = (plan.remat_policy, plan.microbatches)
     cached = _count_cache.get(ck) if _count_cache is not None else None
     if cached is None:
-        sc = _sc or archcount.counts_for(cfg, shape.kind,
-                                         remat_policy=plan.remat_policy)
-        cached = sc.concrete(env)
+        cv = step_vector_fn(cfg, shape.kind, plan.remat_policy, _sc=_sc)
+        full = dict(env)
+        full.setdefault("M", 1)
+        cached = {k: float(v) for k, v in cv(full).items()}
         if _count_cache is not None:
             _count_cache[ck] = cached
     # compute/memory events divide over the mesh (SPMD work division)

@@ -1,0 +1,156 @@
+"""Cost-model-guided block-size autotuning — the paper's §6.2 payoff
+("select the optimal set of kernel configurations") at kernel granularity.
+
+For a kernel family (``core.kernelmodel.KERNELS``) and a concrete problem
+shape, the tuner:
+
+  1. enumerates the hardware-valid candidate grid (power-of-two blocks that
+     divide the shape, filtered by a VMEM-footprint budget);
+  2. builds the kernel's symbolic property vector with the block sizes left
+     as ``symcount`` variables, compiles each property once
+     (``Expr.compile``), and evaluates the WHOLE candidate grid as numpy
+     arrays — no per-point tree-walks;
+  3. scores every candidate through a ``LinearCostModel`` (an in-memory
+     model, a registry device name like ``"gpu-h100"``, or None for the
+     analytic v5e seed) as one weighted sum of property arrays.
+
+``best_block_sizes`` results are memoized per (kernel, shape, model-name),
+so ``block_sizes="auto"`` kernel calls (see ``repro.kernels.ops``) pay the
+sweep once per shape, at trace time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import kernelmodel
+from repro.core.model import LinearCostModel
+from repro.core.symcount import compile_vector, evaluate_vector
+
+
+def _resolve_model(model) -> LinearCostModel:
+    from repro.core import predictor  # accepts None | registry name | model
+    return predictor.resolve_model(model)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def candidate_configs(kernel, shape: Mapping[str, int],
+                      vmem_budget: Optional[float] = None
+                      ) -> List[Dict[str, int]]:
+    """Valid block-size candidates for ``kernel`` at ``shape``: the
+    power-of-two divisor grid, minus configurations whose VMEM working set
+    exceeds the budget (default 75% of a v5e core's 16 MiB)."""
+    km = kernelmodel.get(kernel)
+    if vmem_budget is None:
+        vmem_budget = kernelmodel.VMEM_BYTES * kernelmodel.VMEM_BUDGET
+    cands = km.candidates(shape)
+    ok = [c for c in cands if km.vmem_bytes(shape, c) <= vmem_budget]
+    if not ok:  # nothing fits the budget: keep the smallest footprint
+        ok = [min(cands, key=lambda c: km.vmem_bytes(shape, c))]
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=512)
+def _compiled_vector(kernel_name: str,
+                     shape_items: Tuple[Tuple[str, object], ...]):
+    km = kernelmodel.get(kernel_name)
+    pv = km.vector(dict(shape_items), km.symbolic_blocks())
+    return compile_vector(pv)
+
+
+def score_configs(kernel, shape: Mapping[str, int],
+                  configs: Sequence[Mapping[str, int]],
+                  model=None) -> np.ndarray:
+    """Predicted seconds for every candidate — the compiled fast path.
+
+    One ``Expr.compile`` per property (shape baked in as constants, block
+    sizes free, memoized per shape), one vectorized evaluation over the
+    whole candidate grid, one weighted sum.
+    """
+    km = kernelmodel.get(kernel)
+    model = _resolve_model(model)
+    cv = _compiled_vector(km.name, tuple(sorted(shape.items())))
+    env = {b: np.asarray([c[b] for c in configs], dtype=np.int64)
+           for b in km.block_params}
+    vals = cv(env)
+    weights = dict(zip(model.keys, model.weights))
+    total = np.zeros(len(configs), dtype=np.float64)
+    for key, arr in vals.items():
+        w = weights.get(key)
+        if w:
+            total = total + w * np.asarray(arr, dtype=np.float64)
+    return total
+
+
+def score_configs_interpreted(kernel, shape: Mapping[str, int],
+                              configs: Sequence[Mapping[str, int]],
+                              model=None) -> np.ndarray:
+    """Reference scorer: per-point ``Expr.eval`` + ``model.predict``.
+    Semantically identical to ``score_configs``; kept as the oracle the
+    compiled path is tested (and benchmarked) against."""
+    km = kernelmodel.get(kernel)
+    model = _resolve_model(model)
+    out = np.empty(len(configs), dtype=np.float64)
+    for i, c in enumerate(configs):
+        pv = km.vector(shape, c)
+        out[i] = model.predict(evaluate_vector(pv, {}))
+    return out
+
+
+def rank_block_sizes(kernel, shape: Mapping[str, int], model=None,
+                     configs: Optional[Sequence[Mapping[str, int]]] = None
+                     ) -> List[Tuple[float, Dict[str, int]]]:
+    """All candidates sorted by predicted time (ascending)."""
+    if configs is None:
+        configs = candidate_configs(kernel, shape)
+    secs = score_configs(kernel, shape, configs, model)
+    order = np.argsort(secs, kind="stable")
+    return [(float(secs[i]), dict(configs[i])) for i in order]
+
+
+# ---------------------------------------------------------------------------
+# Public entry point (+ memo for "auto" kernel calls)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=512)
+def _best_cached(kernel_name: str, shape_items: Tuple[Tuple[str, object], ...],
+                 model_name: Optional[str],
+                 _stamp) -> Tuple[Tuple[str, int], ...]:
+    shape = dict(shape_items)
+    ranked = rank_block_sizes(kernel_name, shape, model_name)
+    best = ranked[0][1]
+    return tuple(sorted(best.items()))
+
+
+def best_block_sizes(kernel, shape: Mapping[str, int],
+                     model=None) -> Dict[str, int]:
+    """Model-chosen block sizes for ``kernel`` at ``shape``.
+
+    ``model`` is anything ``core.predictor.resolve_model`` accepts: None
+    (analytic v5e seed), a registry device name (fitted model shadows the
+    analytic seed of the same name), or an in-memory ``LinearCostModel``.
+    """
+    km = kernelmodel.get(kernel)
+    if model is None or isinstance(model, str):
+        # stamp the registry state into the key: a recalibration (or a
+        # registry-dir redirect) must invalidate block choices tuned
+        # against the superseded fitted model
+        stamp = None
+        if isinstance(model, str):
+            from repro.calibration import registry
+            stamp = registry.fingerprint(model)
+        items = tuple(sorted(shape.items()))
+        return dict(_best_cached(km.name, items, model, stamp))
+    return rank_block_sizes(km, shape, model)[0][1]

@@ -8,6 +8,28 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """Version-portable ``jax.make_mesh``.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg) only exist in
+    newer JAX releases; on older ones (e.g. 0.4.37) a plain ``Mesh`` is the
+    same thing — every axis defaults to Auto.  All mesh construction in the
+    repo (and the multidevice tests' subprocess bodies) routes through here.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names), **kwargs)
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod: 16×16 = 256 chips; multi-pod: 2 pods = 512 chips.
 
@@ -17,11 +39,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for tests/examples on CPU."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

@@ -397,7 +397,7 @@ def attn_apply(p, x, cfg, *, positions=None,
                 q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                 v.transpose(0, 2, 1, 3), causal=True,
                 window=cfg.sliding_window,
-                block_q=min(128, S), block_k=min(128, S),
+                block_sizes="auto",  # cost-model-chosen tiling (autotune)
             ).transpose(0, 2, 1, 3)
         elif cp > 1:
             # context parallelism: n_heads % tp != 0, so attention divides

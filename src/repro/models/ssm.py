@@ -165,7 +165,7 @@ def ssm_apply(p, x, cfg, *, state: SSMState | None = None
             y, _ = kops.ssd_scan(
                 xin.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A,
                 Bm.transpose(0, 2, 1, 3), Cm.transpose(0, 2, 1, 3),
-                chunk=chunk)
+                chunk=chunk, block_sizes="auto")
             y = y.transpose(0, 2, 1, 3)
         else:
             y, _ = _ssd_chunked(xin, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,261 @@
+"""Kernel-level predictor & model-guided autotuner (tentpole tests).
+
+Covers: (a) ``Expr.compile`` ≡ ``Expr.eval`` on randomized trees/envs,
+(b) the tuner's ranked-best configuration against exhaustive interpreted
+scoring, (c) ``block_sizes="auto"`` kernels against the pure-jnp oracles,
+plus the compiled-sweep speedup bar and the step-composition invariants.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import kernelmodel
+from repro.core import properties as props
+from repro.core.symcount import (
+    CeilDiv, Const, Expr, FloorDiv, Max, Min, Piecewise, Var, as_expr,
+    compile_vector, evaluate_vector,
+)
+from repro.kernels import autotune
+
+
+# ---------------------------------------------------------------------------
+# (a) compiled ≡ interpreted on randomized expression trees
+# ---------------------------------------------------------------------------
+
+_VARS = ("x", "y", "z")
+
+
+def _rand_expr(rng: random.Random, depth: int = 0) -> Expr:
+    if depth > 4 or rng.random() < 0.25:
+        if rng.random() < 0.5:
+            return Const(rng.randint(1, 9))
+        return Var(rng.choice(_VARS))
+    op = rng.choice(["add", "sub", "mul", "fdiv", "cdiv", "max", "min",
+                     "pow", "div", "pw"])
+    a = _rand_expr(rng, depth + 1)
+    b = _rand_expr(rng, depth + 1)
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "fdiv":
+        return FloorDiv(a, as_expr(rng.randint(1, 7)))
+    if op == "cdiv":
+        return CeilDiv(a, as_expr(rng.randint(1, 7)))
+    if op == "max":
+        return Max(a, b)
+    if op == "min":
+        return Min(a, b)
+    if op == "pow":
+        return a ** rng.choice([1, 2, 3])
+    if op == "div":
+        return a / as_expr(rng.randint(1, 7))
+    return Piecewise([(a - 3, b)], a + b)
+
+
+def test_compiled_matches_eval_randomized():
+    rng = random.Random(1234)
+    for _ in range(200):
+        e = _rand_expr(rng)
+        env = {v: rng.randint(1, 64) for v in _VARS}
+        expected = e.eval(env)
+        got = e.compile()(env)
+        np.testing.assert_allclose(float(got), float(expected), rtol=1e-12)
+
+
+def test_compiled_vectorized_matches_pointwise_eval():
+    rng = random.Random(99)
+    e = _rand_expr(rng)
+    while not e.free_vars():
+        e = _rand_expr(rng)
+    n = 257
+    envs = {v: np.asarray([rng.randint(1, 64) for _ in range(n)])
+            for v in _VARS}
+    arr = e.compile()(envs)
+    pts = [e.eval({v: int(envs[v][i]) for v in _VARS}) for i in range(n)]
+    np.testing.assert_allclose(np.asarray(arr, dtype=np.float64), pts,
+                               rtol=1e-12)
+
+
+def test_compile_vector_passthrough_constants():
+    pv = {"a": Var("x") * 2, "b": 7.0}
+    out = compile_vector(pv)({"x": 5})
+    assert float(out["a"]) == 10.0 and out["b"] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# (b) tuner vs exhaustive interpreted scoring
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "matmul": {"M": 1024, "N": 512, "K": 2048, "bits": 16},
+    "flash_attention": {"B": 2, "H": 8, "KVH": 2, "Sq": 2048, "Skv": 2048,
+                        "dh": 64, "causal": True, "window": None,
+                        "bits": 16},
+    "ssd_scan": {"Bz": 2, "H": 8, "L": 2048, "P": 64, "N": 128, "bits": 16},
+    "transpose": {"M": 2048, "N": 1024, "bits": 32},
+}
+
+
+@pytest.mark.parametrize("kernel", sorted(SHAPES))
+def test_compiled_scoring_matches_interpreted(kernel):
+    shape = SHAPES[kernel]
+    cands = autotune.candidate_configs(kernel, shape)
+    fast = autotune.score_configs(kernel, shape, cands)
+    slow = autotune.score_configs_interpreted(kernel, shape, cands)
+    np.testing.assert_allclose(fast, slow, rtol=1e-12)
+
+
+@pytest.mark.parametrize("kernel", sorted(SHAPES))
+def test_best_block_sizes_in_top3_of_exhaustive(kernel):
+    """Acceptance: the tuner's pick is within the top-3 of an exhaustive
+    per-point interpreted sweep (model.predict over Expr.eval'd vectors)."""
+    shape = SHAPES[kernel]
+    best = autotune.best_block_sizes(kernel, shape)
+    cands = autotune.candidate_configs(kernel, shape)
+    secs = autotune.score_configs_interpreted(kernel, shape, cands)
+    top3 = {tuple(sorted(cands[i].items()))
+            for i in np.argsort(secs, kind="stable")[:3]}
+    assert tuple(sorted(best.items())) in top3
+
+
+def test_best_block_sizes_accepts_registry_name_and_model():
+    from repro.calibration.seeds import ANALYTIC_SEEDS
+    shape = SHAPES["matmul"]
+    by_name = autotune.best_block_sizes("matmul", shape, model="gpu-a100")
+    by_model = autotune.best_block_sizes("matmul", shape,
+                                         model=ANALYTIC_SEEDS["gpu-a100"]())
+    assert by_name == by_model
+
+
+def test_candidates_respect_vmem_budget():
+    shape = SHAPES["matmul"]
+    km = kernelmodel.get("matmul")
+    budget = kernelmodel.VMEM_BYTES * kernelmodel.VMEM_BUDGET
+    for c in autotune.candidate_configs("matmul", shape):
+        assert km.vmem_bytes(shape, c) <= budget
+
+
+def test_compiled_sweep_speedup_over_interpreted():
+    """Acceptance: ≥10× on a ≥64-point grid (best-of-3, warm compile)."""
+    shape = SHAPES["matmul"]
+    cands = autotune.candidate_configs("matmul", shape)
+    assert len(cands) >= 64, len(cands)
+    autotune.score_configs("matmul", shape, cands)  # warm codegen memo
+
+    def best_of(fn, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_fast = best_of(lambda: autotune.score_configs("matmul", shape, cands))
+    t_slow = best_of(lambda: autotune.score_configs_interpreted(
+        "matmul", shape, cands))
+    assert t_slow >= 10.0 * t_fast, (t_slow, t_fast)
+
+
+# ---------------------------------------------------------------------------
+# (c) block_sizes="auto" kernels vs the reference oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_matmul_matches_ref():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (256, 512), jnp.float32)
+    b = jax.random.normal(k2, (512, 384), jnp.float32)
+    o = ops.matmul(a, b, block_sizes="auto", interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref.matmul(a, b)),
+                               atol=1e-3, rtol=1e-5)
+
+
+def test_auto_flash_attention_matches_ref():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 2, 256, 64), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, block_sizes="auto",
+                            interpret=True)
+    r = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_auto_ssd_scan_matches_ref():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    Bz, H, G, L, P, N = 1, 2, 1, 256, 16, 16
+    x = jax.random.normal(ks[0], (Bz, H, L, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, H, L), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B = jax.random.normal(ks[3], (Bz, G, L, N), jnp.float32) * 0.3
+    C = jax.random.normal(ks[4], (Bz, G, L, N), jnp.float32) * 0.3
+    y, h = ops.ssd_scan(x, dt, A, B, C, block_sizes="auto", interpret=True)
+    yr, hr = ref.ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_auto_transpose_matches_ref():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.PRNGKey(5), (512, 256), jnp.float32)
+    o = ops.transpose(x, block_sizes="auto", interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(x.T))
+
+
+# ---------------------------------------------------------------------------
+# step composition — the predictor's per-kernel compute term
+# ---------------------------------------------------------------------------
+
+
+def test_step_kernel_vectors_track_archcount_mxu():
+    """The kernel-composed mxu total must agree with archcount's step count
+    in the leading term (block rounding only adds low-order overshoot)."""
+    from repro.configs.registry import ARCHS
+    from repro.core import archcount
+    from repro.core.symcount import add_vectors
+    env = {"B": 8, "S": 4096, "M": 1}
+    for arch in ("glm4-9b", "mamba2-370m", "mixtral-8x7b", "zamba2-2.7b"):
+        cfg = ARCHS[arch]
+        bits = 16 if "16" in cfg.compute_dtype else 32
+        total = add_vectors(
+            *kernelmodel.step_kernel_vectors(cfg, "prefill").values())
+        kern = evaluate_vector(total, env)[props.mxu_key(bits)]
+        step = archcount.forward_counts(cfg)[props.mxu_key(bits)].eval(env)
+        assert kern == pytest.approx(step, rel=0.05), (arch, kern, step)
+
+
+def test_predict_step_uses_kernel_local_traffic():
+    """Kernel-granularity compute terms add VMEM (local:) traffic to the
+    step breakdown — absent from the old whole-step counts."""
+    from repro.configs.base import SHAPES as SHAPES_CFG
+    from repro.configs.registry import ARCHS
+    from repro.core import predictor
+    from repro.distributed.plan import Plan
+    cfg = ARCHS["glm4-9b"]
+    pred = predictor.predict_step(cfg, SHAPES_CFG["train_4k"],
+                                  Plan(dp_axes=("data",)),
+                                  {"data": 8, "model": 8})
+    bits = 16 if "16" in cfg.compute_dtype else 32
+    assert props.local_key(bits) in pred.breakdown
+    assert pred.seconds > 0 and np.isfinite(pred.seconds)

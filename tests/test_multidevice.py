@@ -38,8 +38,8 @@ def test_psum_compressed_matches_fp32_psum():
     from jax.sharding import PartitionSpec as P
     from repro.distributed import compression as comp
 
-    mesh = jax.make_mesh((8,), ('data',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ('data',))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
 
     def body(xs):
@@ -73,8 +73,8 @@ def test_manual_dp_train_step_compression_converges_like_fp32():
     from repro.models import transformer
 
     cfg = ARCHS['smollm-360m'].reduced()
-    mesh = jax.make_mesh((8,), ('data',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ('data',))
     optimizer = opt.get_optimizer('adamw')
     params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
     B, S = 16, 32
@@ -116,8 +116,8 @@ def test_sharded_train_lowering_small_mesh():
     from repro.launch.specs import step_and_specs
     from repro.core import extract as cx
 
-    mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ('data', 'model'))
     cfg, shape = ARCHS['smollm-360m'], SHAPES['train_4k']
     plan = plan_for(cfg, shape, tp_size=4)
     with mesh, use_sharding(mesh, plan):
@@ -151,8 +151,8 @@ def test_elastic_mesh_switch_resumes_from_checkpoint(tmp_path):
                                      cfg.vocab_size, jnp.int32),
     }}
     # train 2 steps on an 8-device DP mesh, checkpoint
-    mesh8 = jax.make_mesh((8,), ('data',),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh8 = make_mesh((8,), ('data',))
     fn8, init_ef = steps.make_manual_dp_train_step(cfg, optimizer, mesh8)
     ef = init_ef(params)
     for _ in range(2):
@@ -160,8 +160,7 @@ def test_elastic_mesh_switch_resumes_from_checkpoint(tmp_path):
     store.save(r'{tmp_path}', int(st.step), st)
 
     # 'failure': restart on a 4-device mesh from the checkpoint
-    mesh4 = jax.make_mesh((4,), ('data',), devices=jax.devices()[:4],
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh4 = make_mesh((4,), ('data',), devices=jax.devices()[:4])
     st2, _ = store.restore(r'{tmp_path}', st)
     assert int(st2.step) == 2
     fn4, init_ef4 = steps.make_manual_dp_train_step(cfg, optimizer, mesh4)
@@ -187,8 +186,8 @@ def test_moe_expert_parallel_lowering():
     from repro.launch.specs import step_and_specs
     from repro.core import extract as cx
 
-    mesh = jax.make_mesh((1, 8), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 8), ('data', 'model'))
     cfg, shape = ARCHS['mixtral-8x7b'], SHAPES['prefill_32k']
     shape = dataclasses.replace(shape, global_batch=8)  # CPU-sized lowering
     plan = plan_for(cfg, shape, tp_size=8).with_(moe_mode='ep')
