@@ -6,6 +6,8 @@ framework-level analyses.
   paper_table1          paper §5 Table 1 (fit + held-out test kernels)
   paper_table2          paper Table 2 (fitted weights, interpreted)
   predictor_validation  beyond-paper: whole-step CPU prediction
+  search_bench          beyond-paper: (plan × mesh) sweep, interpreted loop
+                        vs. the array-batched engine (core/planspace.py)
   roofline              40-cell roofline table from experiments/dryrun.json
                         (run `python -m repro.launch.dryrun` first; skipped
                         with a notice if the dry-run artifact is absent)
@@ -28,7 +30,8 @@ def main() -> None:
 
     t0 = time.time()
     names = [args.only] if args.only else [
-        "paper_table1", "paper_table2", "predictor_validation", "roofline"]
+        "paper_table1", "paper_table2", "predictor_validation",
+        "search_bench", "roofline"]
 
     for name in names:
         print(f"\n{'='*72}\n== benchmarks.{name}\n{'='*72}")
@@ -41,6 +44,9 @@ def main() -> None:
         elif name == "predictor_validation":
             from benchmarks import predictor_validation
             predictor_validation.main(args.scale)
+        elif name == "search_bench":
+            from benchmarks import search_bench
+            search_bench.main([])
         elif name == "roofline":
             from benchmarks import roofline
             if os.path.exists("experiments/dryrun.json"):

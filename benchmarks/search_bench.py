@@ -1,0 +1,129 @@
+"""Search-space sweep benchmark: per-plan interpreted loop vs. the
+array-batched engine (``core.planspace``).
+
+Builds a ≥10k-cell (plan × mesh-factorization) candidate space, scores it
+twice — once through the pre-engine path (``predictor.predict_plans_loop``:
+per-plan ``plan_property_vector`` assembly + one ``predict_many``) and once
+through ``PlanSpace.scores`` (compiled property vectors over array
+environments) — checks the two agree, and records wall times + speedup.
+
+    PYTHONPATH=src python -m benchmarks.search_bench \
+        [--arch glm4-9b] [--shape train_4k] [--target-cells 10000] \
+        [--repeats 3] [--out experiments/BENCH_search.json]
+
+CI runs this and uploads the JSON; the acceptance bar is a ≥20× batched
+speedup at ≥10k cells (see ISSUE/EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.core import planspace, predictor
+from repro.launch.autoshard import candidate_plans
+
+#: chip counts whose factorizations make up the mesh side of the sweep;
+#: mixed powers of two and 3·2^k so the dp/tp columns are irregular
+DEVICE_LADDER = (256, 384, 512, 768, 1024, 1536, 2048, 3072, 4096, 6144)
+
+
+def build_space(cfg, shape, target_cells: int):
+    plans = candidate_plans(cfg, shape)
+    meshes: List[Dict[str, int]] = []
+    for n in DEVICE_LADDER:
+        meshes.extend(planspace.mesh_factorizations(n))
+        if len(plans) * len(meshes) >= target_cells:
+            break
+    return plans, meshes
+
+
+def time_fn(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="glm4-9b", choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
+    ap.add_argument("--target-cells", type=int, default=10000)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--model", default=None)
+    ap.add_argument("--out", default="experiments/BENCH_search.json")
+    args = ap.parse_args(argv)
+
+    cfg, shape = ARCHS[args.arch], SHAPES[args.shape]
+    model = predictor.resolve_model(args.model)
+    plans, meshes = build_space(cfg, shape, args.target_cells)
+    n_cells = len(plans) * len(meshes)
+    print(f"sweep: {len(plans)} plans × {len(meshes)} meshes = "
+          f"{n_cells} cells ({args.arch} × {args.shape})")
+
+    # warm the compiled-vector caches so both paths time *evaluation*
+    # (the loop path shares step_vector_fn's compiled closures too)
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+    batched = space.scores(model)
+    loop_ref = np.concatenate([
+        predictor.predict_plans_loop(cfg, shape, plans, m, model)
+        for m in meshes])
+    # from_product is plan-major; the loop above is mesh-major per plan set
+    np.testing.assert_allclose(
+        batched.reshape(len(plans), len(meshes)),
+        loop_ref.reshape(len(meshes), len(plans)).T, rtol=1e-9)
+
+    def run_loop():
+        for m in meshes:
+            predictor.predict_plans_loop(cfg, shape, plans, m, model)
+
+    def run_batched():
+        planspace.PlanSpace.from_product(cfg, shape, plans, meshes) \
+            .scores(model)
+
+    loop_s = time_fn(run_loop, args.repeats)
+    batched_s = time_fn(run_batched, args.repeats)
+    speedup = loop_s / batched_s
+
+    result = {
+        "benchmark": "search_bench",
+        "arch": args.arch,
+        "shape": args.shape,
+        "n_plans": len(plans),
+        "n_meshes": len(meshes),
+        "n_cells": n_cells,
+        "repeats": args.repeats,
+        "loop_s": loop_s,
+        "batched_s": batched_s,
+        "speedup": speedup,
+        "loop_us_per_cell": loop_s / n_cells * 1e6,
+        "batched_us_per_cell": batched_s / n_cells * 1e6,
+        "model": model.device,
+        "scores_match_rtol": 1e-9,
+    }
+    print(f"loop:    {loop_s*1e3:9.1f} ms  "
+          f"({result['loop_us_per_cell']:.2f} µs/cell)")
+    print(f"batched: {batched_s*1e3:9.1f} ms  "
+          f"({result['batched_us_per_cell']:.3f} µs/cell)")
+    print(f"speedup: {speedup:.1f}x over {n_cells} cells")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+    if speedup < 20:
+        print("WARNING: speedup below the 20x acceptance bar")
+    return result
+
+
+if __name__ == "__main__":
+    main()

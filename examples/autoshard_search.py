@@ -30,10 +30,21 @@ def main():
         dt = time.perf_counter() - t0
         print(f"\n{arch} × {shape}: ranked {len(plans)} plans "
               f"in {dt*1e3:.0f} ms")
-        for t, p in ranked:
+        for t, p, mesh in ranked:
             print(f"  {t*1e3:9.2f} ms/step  fsdp={p.fsdp} "
                   f"mb={p.microbatches} remat={p.remat_policy} "
                   f"comp={p.compression}")
+
+    # 1b — mesh-factorization sweep (the batched engine makes it cheap) ----
+    t0 = time.perf_counter()
+    swept = autoshard.search("glm4-9b", "train_4k", n_devices=1024,
+                             top_k=3)
+    dt = time.perf_counter() - t0
+    print(f"\nglm4-9b × train_4k over every 1024-chip mesh "
+          f"factorization ({dt*1e3:.0f} ms):")
+    for t, p, mesh in swept:
+        print(f"  {t*1e3:9.2f} ms/step  mesh={mesh} fsdp={p.fsdp} "
+              f"mb={p.microbatches} remat={p.remat_policy}")
 
     # 2 — load balancing across heterogeneous pools ------------------------
     print("\nload balancing a mixed queue over pod-A (16×16) and "

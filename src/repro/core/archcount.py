@@ -33,18 +33,20 @@ Counting conventions
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Mapping, Optional
+from typing import Dict, Mapping, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core import properties as props
 from repro.core.symcount import (
-    CeilDiv, Const, Expr, ExprLike, Max, Min, Var, add_vectors, as_expr,
-    evaluate_vector, scale_vector,
+    CeilDiv, Const, Expr, ExprLike, Max, Min, Piecewise, Var, add_vectors,
+    as_expr, evaluate_vector, scale_vector,
 )
 
 B = Var("B")   # global batch
 S = Var("S")   # sequence length (train/prefill) or KV length (decode)
 M = Var("M")   # microbatches
+DP = Var("DP")  # data-parallel ways (product of the plan's dp-axis sizes)
+TP = Var("TP")  # tensor-parallel ways (the plan's tp-axis size)
 
 
 def _bits(cfg: ArchConfig) -> int:
@@ -346,6 +348,71 @@ def counts_for(cfg: ArchConfig, kind: str,
 # ---------------------------------------------------------------------------
 # Collective counts for a (Plan, mesh) — the beyond-paper distributed terms
 # ---------------------------------------------------------------------------
+
+
+def collective_topology(plan) -> Tuple[bool, Optional[str], str]:
+    """The plan fields that select *which* collective terms exist — the
+    'topology class' of ``collective_counts_symbolic``.  Plans sharing a
+    class share one compiled collective vector; everything else about the
+    mesh (dp/tp ways) and the schedule (microbatches) enters through the
+    free variables DP/TP/M."""
+    return (bool(plan.fsdp), plan.compression, plan.moe_mode)
+
+
+def collective_counts_symbolic(cfg: ArchConfig, kind: str,
+                               topology: Tuple[bool, Optional[str], str]
+                               ) -> Dict[str, ExprLike]:
+    """Per-device collective bytes as Exprs in {B, S, M, DP, TP}.
+
+    The closed forms are ``collective_counts``'s, with the mesh-dependent
+    gates (``dp > 1``, ``tp > 1``) expressed as ``Piecewise`` guards on
+    ``DP - 1`` / ``TP - 1`` instead of Python ``if``s — so ONE compiled
+    vector per (kind, topology class) scores a whole mesh-factorization
+    sweep as array ops (``np.where`` over the DP/TP arrays).  The batched
+    search engine (``core.planspace``) compiles these per class; the
+    interpreted ``collective_counts`` stays the per-plan reference and
+    tests pin the two pointwise.
+    """
+    fsdp, compression, moe_mode = topology
+    bits = _bits(cfg)
+    bytes_per = bits // 8
+    out: Dict[str, ExprLike] = {}
+    T_dev = B * S / DP            # tokens per device
+    d = cfg.d_model
+    zero = Const(0)
+
+    param_bytes_tp = as_expr(cfg.n_params() * bytes_per) / TP
+    if fsdp:
+        n_gather = (2.0 * M) if kind == "train" else as_expr(1.0)
+        gather = n_gather * ((DP - 1) / DP) * param_bytes_tp
+        out[props.coll_key("all_gather")] = Piecewise([(DP - 1, gather)],
+                                                      zero)
+    if kind == "train":
+        grad_bytes = as_expr(4.0 * cfg.n_params()) / TP  # f32, TP-sharded
+        if compression == "int8_ef":
+            grad_bytes = grad_bytes / 4.0
+        if fsdp:  # grads land sharded: reduce-scatter, 1× wire
+            out[props.coll_key("reduce_scatter")] = Piecewise(
+                [(DP - 1, ((DP - 1) / DP) * grad_bytes)], zero)
+        else:
+            out[props.coll_key("all_reduce")] = Piecewise(
+                [(DP - 1, 2.0 * ((DP - 1) / DP) * grad_bytes)], zero)
+    if cfg.n_heads:
+        # Megatron TP: 2 all-reduces of the residual per layer fwd (+2 bwd)
+        n_ar = 2.0 * cfg.n_layers * (2.0 if kind == "train" else 1.0)
+        act = (as_expr(B) * d * bytes_per if kind == "decode"
+               else T_dev * d * bytes_per)
+        term = Piecewise(
+            [(TP - 1, as_expr(n_ar * 2.0) * ((TP - 1) / TP) * act)], zero)
+        prev = out.get(props.coll_key("all_reduce"))
+        out[props.coll_key("all_reduce")] = \
+            term if prev is None else as_expr(prev) + term
+    if cfg.moe is not None and moe_mode == "ep":
+        tok = as_expr(B) if kind == "decode" else T_dev
+        a2a = tok * d * bytes_per * cfg.moe.top_k * 2.0  # dispatch + combine
+        out[props.coll_key("all_to_all")] = Piecewise(
+            [(TP - 1, a2a * ((TP - 1) / TP))], zero)
+    return out
 
 
 def collective_counts(cfg: ArchConfig, kind: str, plan, mesh_shape:

@@ -1,0 +1,453 @@
+"""Array-batched search-space engine: score a whole (plan × mesh ×
+block-size) candidate space in one vectorized pass.
+
+The paper's payoff is that prediction is "a small inner product" — cheap
+enough to sweep entire configuration spaces (§6.2).  ``predict_plans``
+already batched the final ``A @ w``; this module batches everything
+*upstream* of it, so a sweep of thousands of (plan, mesh-factorization)
+cells runs as array ops end to end with no per-candidate Python:
+
+  * candidate sets are struct-of-arrays (``PlanSpace``): parallel numpy
+    arrays of dp/tp ways, device counts and microbatches next to the plan
+    objects themselves;
+  * step property vectors evaluate through the COMPILED
+    ``predictor.step_vector_fn`` closures (``symcount.Expr.compile`` — the
+    ≥10× fast path proven in the block-size autotuner), one call per
+    distinct remat schedule with the microbatch column as an array env;
+  * collective counts compile once per (kind, topology-class)
+    (``archcount.collective_counts_symbolic``) with the mesh gates lowered
+    to ``np.where`` over the DP/TP arrays;
+  * HBM feasibility (``peak_bytes`` / ``feasible_mask``) is a single numpy
+    pass over the candidate arrays, not a per-plan list comprehension.
+
+Consumers: ``launch/autoshard.py`` (plan × mesh sweep + optional kernel
+block co-tuning), ``distributed/elastic.replan`` and
+``runtime/straggler.StragglerMonitor.from_model`` (both via
+``predictor.predict_plans``, which routes here).
+
+``benchmarks/search_bench.py`` times this engine against the per-plan
+interpreted loop (``predictor.predict_plans_loop``) and records the
+speedup in ``experiments/BENCH_search.json``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from math import prod
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import archcount
+from repro.core import predictor
+from repro.core import properties as props
+from repro.core.lru import LRUCache
+
+Mesh = Dict[str, int]
+Cell = Tuple[object, Mapping[str, int]]  # (Plan, mesh_shape)
+
+#: (cfg, kind, topology-class) -> CompiledVector over {B, S, M, DP, TP}.
+#: Bounded: configs come and go (smoke variants, sweeps over reduced archs)
+#: and each entry pins a whole ArchConfig, so evict beyond recent use.
+_COLL_CV_CACHE: LRUCache = LRUCache(maxsize=128)
+
+
+def _collective_vector_fn(cfg: ArchConfig, kind: str, topology):
+    from repro.core.symcount import compile_vector
+    key = (cfg, kind, topology)
+    cv = _COLL_CV_CACHE.get(key)
+    if cv is None:
+        cv = compile_vector(
+            archcount.collective_counts_symbolic(cfg, kind, topology))
+        _COLL_CV_CACHE[key] = cv
+    return cv
+
+
+# ---------------------------------------------------------------------------
+# Mesh-factorization space (promoted from distributed/elastic.py)
+# ---------------------------------------------------------------------------
+
+
+def factor_pairs(n: int) -> List[Tuple[int, int]]:
+    """All ordered (a, b) with a·b == n — the 2-axis mesh factorizations."""
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append((d, n // d))
+            if d != n // d:
+                out.append((n // d, d))
+        d += 1
+    return sorted(set(out))
+
+
+def mesh_factorizations(n_devices: int,
+                        axes: Tuple[str, str] = ("data", "model"),
+                        max_candidates: Optional[int] = None) -> List[Mesh]:
+    """Every 2-axis mesh shape with ``n_devices`` chips — the sweep space
+    ``autoshard.search(n_devices=...)`` and ``elastic.replan`` score."""
+    if len(axes) != 2:
+        raise ValueError(f"mesh_factorizations is 2-axis; got {axes!r}")
+    pairs = factor_pairs(n_devices)
+    if max_candidates is not None:
+        pairs = pairs[:max_candidates]
+    return [{axes[0]: a, axes[1]: b} for a, b in pairs]
+
+
+# ---------------------------------------------------------------------------
+# The candidate space
+# ---------------------------------------------------------------------------
+
+
+def _axis_product(mesh: Mapping[str, int], axes) -> int:
+    out = 1
+    for ax in axes:
+        out *= mesh.get(ax, 1)
+    return out
+
+
+def _group_indices(keys: Sequence) -> Dict[object, np.ndarray]:
+    groups: Dict[object, List[int]] = {}
+    for i, k in enumerate(keys):
+        groups.setdefault(k, []).append(i)
+    return {k: np.asarray(v, dtype=np.intp) for k, v in groups.items()}
+
+
+def plan_sort_key(plan) -> tuple:
+    """Deterministic, enumeration-order-free ordering of plans — the
+    tie-break ``rank_plans`` / ``PlanSpace.rank`` apply after seconds."""
+    return (plan.fsdp, plan.sequence_parallel, plan.microbatches,
+            plan.remat_policy or "", plan.compression or "",
+            plan.moe_mode, plan.dp_axes, plan.tp_axis or "",
+            plan.cache_seq_axes)
+
+
+def mesh_sort_key(mesh: Mapping[str, int]) -> tuple:
+    return tuple(sorted(mesh.items()))
+
+
+@dataclass
+class PlanSpace:
+    """A candidate set of (plan, mesh) cells as struct-of-arrays.
+
+    ``plans[i]`` / ``mesh_shapes[i]`` describe cell *i*; the numpy columns
+    (``dp``, ``tp``, ``n_dev``, ``microbatches``) are what the vectorized
+    evaluators consume.  Build with ``from_cells`` / ``from_product``.
+    """
+    cfg: ArchConfig
+    shape: ShapeConfig
+    plans: List[object]
+    mesh_shapes: List[Mesh]
+    dp: np.ndarray            # data-parallel ways per cell (int64)
+    tp: np.ndarray            # tensor-parallel ways per cell (int64)
+    n_dev: np.ndarray         # total devices per cell (int64)
+    microbatches: np.ndarray  # grad-accumulation chunks per cell (int64)
+    #: optional precomputed cell-index groups (set by ``from_product``,
+    #: which derives them from the small plan list instead of walking all
+    #: n_plans × n_meshes cells): {group_key: (n_group_cells,) intp}
+    remat_groups: Optional[Dict[object, np.ndarray]] = field(default=None)
+    topo_groups: Optional[Dict[object, np.ndarray]] = field(default=None)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_cells(cls, cfg: ArchConfig, shape: ShapeConfig,
+                   cells: Sequence[Cell]) -> "PlanSpace":
+        plans = [p for p, _ in cells]
+        meshes = [dict(m) for _, m in cells]
+        dp = np.asarray([_axis_product(m, p.dp_axes)
+                         for p, m in zip(plans, meshes)], dtype=np.int64)
+        tp = np.asarray([m.get(p.tp_axis, 1) if p.tp_axis else 1
+                         for p, m in zip(plans, meshes)], dtype=np.int64)
+        n_dev = np.asarray([max(prod(m.values()), 1) if m else 1
+                            for m in meshes], dtype=np.int64)
+        mb = np.asarray([p.microbatches for p in plans], dtype=np.int64)
+        return cls(cfg=cfg, shape=shape, plans=plans, mesh_shapes=meshes,
+                   dp=dp, tp=tp, n_dev=n_dev, microbatches=mb)
+
+    @classmethod
+    def from_product(cls, cfg: ArchConfig, shape: ShapeConfig,
+                     plans: Sequence, meshes: Sequence[Mapping[str, int]]
+                     ) -> "PlanSpace":
+        """Plan-major cross product: cell (i·len(meshes) + j) = plan i on
+        mesh j — so a single-mesh product keeps the plans' order.
+
+        The struct-of-arrays columns come from ``np.repeat``/``np.tile``
+        of the per-plan and per-mesh vectors — O(n_plans + n_meshes)
+        Python, not O(n_cells) — and the evaluation groups (remat
+        schedule, collective topology class) are computed on the plan
+        list and expanded arithmetically."""
+        plans = list(plans)
+        meshes = [dict(m) for m in meshes]
+        n_p, n_m = len(plans), len(meshes)
+        mesh_ndev = np.asarray([max(prod(m.values()), 1) if m else 1
+                                for m in meshes], dtype=np.int64)
+        dp_rows: Dict[tuple, np.ndarray] = {}
+        tp_rows: Dict[Optional[str], np.ndarray] = {}
+        for p in plans:
+            if p.dp_axes not in dp_rows:
+                dp_rows[p.dp_axes] = np.asarray(
+                    [_axis_product(m, p.dp_axes) for m in meshes],
+                    dtype=np.int64)
+            if p.tp_axis not in tp_rows:
+                tp_rows[p.tp_axis] = np.asarray(
+                    [m.get(p.tp_axis, 1) if p.tp_axis else 1
+                     for m in meshes], dtype=np.int64)
+        dp = np.concatenate([dp_rows[p.dp_axes] for p in plans]) \
+            if n_p else np.zeros(0, dtype=np.int64)
+        tp = np.concatenate([tp_rows[p.tp_axis] for p in plans]) \
+            if n_p else np.zeros(0, dtype=np.int64)
+        n_dev = np.tile(mesh_ndev, n_p)
+        mb = np.repeat(np.asarray([p.microbatches for p in plans],
+                                  dtype=np.int64), n_m)
+
+        def expand(groups: Dict[object, np.ndarray]):
+            j = np.arange(n_m, dtype=np.intp)
+            return {k: (idx[:, None] * n_m + j).ravel()
+                    for k, idx in groups.items()}
+
+        remat = expand(_group_indices([p.remat_policy for p in plans]))
+        topo = expand(_group_indices(
+            [archcount.collective_topology(p) for p in plans]))
+        return cls(cfg=cfg, shape=shape,
+                   plans=[p for p in plans for _ in range(n_m)],
+                   mesh_shapes=meshes * n_p,
+                   dp=dp, tp=tp, n_dev=n_dev, microbatches=mb,
+                   remat_groups=remat, topo_groups=topo)
+
+    def __len__(self) -> int:
+        return len(self.plans)
+
+    def subset(self, idx) -> "PlanSpace":
+        """Cells at ``idx`` (a boolean mask or an array of UNIQUE cell
+        indices, in any order) as a new space."""
+        idx = np.asarray(idx)
+        if idx.dtype == bool:
+            idx = np.nonzero(idx)[0]
+
+        def remap(groups):
+            # old cell index -> position in the subset (O(n) numpy), so a
+            # feasibility-filtered space keeps its precomputed groups
+            # instead of re-walking every surviving cell in Python
+            if groups is None:
+                return None
+            pos = np.full(len(self), -1, dtype=np.intp)
+            pos[idx] = np.arange(len(idx), dtype=np.intp)
+            out = {}
+            for k, g in groups.items():
+                kept = pos[g]
+                kept = kept[kept >= 0]
+                if len(kept):
+                    out[k] = kept
+            return out
+
+        return PlanSpace(
+            cfg=self.cfg, shape=self.shape,
+            plans=[self.plans[i] for i in idx],
+            mesh_shapes=[self.mesh_shapes[i] for i in idx],
+            dp=self.dp[idx], tp=self.tp[idx], n_dev=self.n_dev[idx],
+            microbatches=self.microbatches[idx],
+            remat_groups=remap(self.remat_groups),
+            topo_groups=remap(self.topo_groups))
+
+    # -- vectorized property assembly --------------------------------------
+    def property_arrays(self) -> Dict[str, np.ndarray]:
+        """The whole candidate set's property vectors as columns:
+        ``{key: (n_cells,) float64}``.  Row i of the implied matrix equals
+        ``predictor.plan_property_vector`` for cell i (absent keys = 0)."""
+        n = len(self)
+        kind = self.shape.kind
+        B, S = self.shape.global_batch, self.shape.seq_len
+        out: Dict[str, np.ndarray] = {}
+
+        def acc(key: str, idx: np.ndarray, vals: np.ndarray) -> None:
+            col = out.get(key)
+            if col is None:
+                col = np.zeros(n, dtype=np.float64)
+                out[key] = col
+            col[idx] += vals
+
+        # step terms: one compiled evaluation per distinct remat schedule,
+        # microbatches as an array env; compute/memory divide over the mesh
+        remat_groups = self.remat_groups if self.remat_groups is not None \
+            else _group_indices([p.remat_policy for p in self.plans])
+        for remat, idx in remat_groups.items():
+            cv = predictor.step_vector_fn(self.cfg, kind, remat)
+            env = {"B": B, "S": S, "M": self.microbatches[idx]}
+            for k, v in cv(env).items():
+                v = np.broadcast_to(
+                    np.asarray(v, dtype=np.float64), idx.shape)
+                acc(k, idx, v / self.n_dev[idx])
+
+        # collective terms: one compiled evaluation per topology class,
+        # already per-device (DP/TP gates lowered to np.where)
+        topo_groups = self.topo_groups if self.topo_groups is not None \
+            else _group_indices(
+                [archcount.collective_topology(p) for p in self.plans])
+        for topo, idx in topo_groups.items():
+            cv = _collective_vector_fn(self.cfg, kind, topo)
+            env = {"B": B, "S": S, "M": self.microbatches[idx],
+                   "DP": self.dp[idx], "TP": self.tp[idx]}
+            for k, v in cv(env).items():
+                acc(k, idx, np.broadcast_to(
+                    np.asarray(v, dtype=np.float64), idx.shape))
+
+        out[props.CONST1] = np.ones(n, dtype=np.float64)
+        return out
+
+    # -- scoring -----------------------------------------------------------
+    def scores(self, model=None) -> np.ndarray:
+        """Predicted step seconds for every cell — `<α, p>` as a weighted
+        sum of property columns (identical to ``predict_many`` restricted
+        to the model's keys, without materializing the dense matrix)."""
+        m = predictor.resolve_model(model)
+        arrs = self.property_arrays()
+        total = np.zeros(len(self), dtype=np.float64)
+        for key, w in zip(m.keys, m.weights):
+            col = arrs.get(key)
+            if col is not None and w:
+                total += float(w) * col
+        return total
+
+    def rank(self, model=None) -> List[Tuple[float, object, Mesh]]:
+        """All cells as (seconds, plan, mesh), ascending; ties broken on
+        plan fields then mesh shape — never on enumeration order."""
+        secs = self.scores(model)
+        order = sorted(range(len(self)),
+                       key=lambda i: (secs[i], plan_sort_key(self.plans[i]),
+                                      mesh_sort_key(self.mesh_shapes[i])))
+        return [(float(secs[i]), self.plans[i], self.mesh_shapes[i])
+                for i in order]
+
+    # -- feasibility -------------------------------------------------------
+    def peak_bytes(self) -> np.ndarray:
+        """Closed-form peak HBM bytes/device per cell, one numpy pass."""
+        return _peak_bytes_soa(self.cfg, self.shape, self.plans,
+                               self.dp, self.tp)
+
+    def feasible_mask(self, budget: Optional[float] = None) -> np.ndarray:
+        if budget is None:
+            budget = predictor.HBM_BYTES
+        return self.peak_bytes() <= budget
+
+
+# ---------------------------------------------------------------------------
+# Vectorized HBM feasibility (the predictor's napkin math, column-wise)
+# ---------------------------------------------------------------------------
+
+
+def _peak_bytes_soa(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+                    dp: np.ndarray, tp: np.ndarray) -> np.ndarray:
+    """``predictor.estimate_peak_bytes`` over candidate arrays.  The plan
+    booleans become masks, the mesh ways are the dp/tp columns, and every
+    branch of the scalar formula lowers to ``np.where`` — the scalar
+    version delegates here with single-element arrays, so there is exactly
+    one copy of the napkin math."""
+    dp = np.asarray(dp, dtype=np.float64)
+    tp = np.asarray(tp, dtype=np.float64)
+    # dtype=bool: an empty list would otherwise default to float64 and
+    # break the mask arithmetic below
+    fsdp = np.asarray([bool(p.fsdp) for p in plans], dtype=bool)
+    sp = np.asarray([bool(p.sequence_parallel) for p in plans], dtype=bool)
+    mb = np.asarray([max(p.microbatches, 1) for p in plans],
+                    dtype=np.float64)
+
+    P = cfg.n_params()
+    bytes_p = 2 if "16" in cfg.param_dtype else 4
+    pshard = tp * np.where(fsdp, dp, 1.0)
+    total = P * bytes_p / pshard
+
+    if shape.kind == "train":
+        opt_bytes = {"adamw": 8.0, "adafactor": 0.1,
+                     "sgd": 4.0}[cfg.optimizer]
+        total += P * opt_bytes / pshard           # optimizer state
+        total += P * 4.0 / pshard                 # f32 grads (transient)
+        # scan-over-layers gathers ONE layer's shard at a time (FSDP)
+        total += np.where(fsdp & (dp > 1),
+                          P * bytes_p / (tp * max(cfg.n_layers, 1)), 0.0)
+        Bm = shape.global_batch / mb
+        tok = Bm * shape.seq_len / dp
+        act_shard = np.where(sp, tp, 1.0)
+        saves_by = {"full": 1.0, "nothing": 1.0, "dots": 4.0,
+                    "none": 10.0, None: 1.0}
+        saves = np.asarray(
+            [saves_by[p.remat_policy or cfg.remat_policy] for p in plans],
+            dtype=np.float64)
+        total += saves * cfg.n_layers * tok * cfg.d_model * 2 / act_shard
+        total += 12.0 * tok * cfg.d_model * 2 / act_shard  # live layer
+        # logits in f32 for the loss
+        total += tok * cfg.vocab_size * cfg.n_output_heads * 4 / tp
+    elif shape.kind == "prefill":
+        tok = shape.global_batch * shape.seq_len / dp
+        total += 16.0 * tok * cfg.d_model * 2 / np.where(sp, tp, 1.0)
+        total += tok * cfg.vocab_size * cfg.n_output_heads * 2 / tp
+    else:  # decode: KV/SSM caches dominate
+        Bd = shape.global_batch / dp
+        if cfg.n_heads:
+            has_cs = np.asarray([bool(p.cache_seq_axes) for p in plans],
+                                dtype=bool)
+            ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+            n_attn = (cfg.n_layers // cfg.hybrid.attn_every
+                      if cfg.family == "hybrid" else cfg.n_layers)
+            kv_shard = np.where(has_cs, tp,
+                                np.minimum(tp, cfg.n_kv_heads))
+            total += (2 * Bd * ctx * cfg.n_kv_heads * cfg.head_dim_
+                      * 2 * n_attn) / kv_shard
+        if cfg.ssm is not None:
+            total += (cfg.n_layers * Bd * cfg.ssm_heads * cfg.ssm.head_dim
+                      * cfg.ssm.d_state * 4) / np.minimum(tp, cfg.ssm_heads)
+    return np.asarray(total, dtype=np.float64)
+
+
+def peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+               mesh_shapes: Sequence[Mapping[str, int]]) -> np.ndarray:
+    """Peak HBM bytes/device for parallel (plan, mesh) candidate lists."""
+    dp = np.asarray([_axis_product(m, p.dp_axes)
+                     for p, m in zip(plans, mesh_shapes)], dtype=np.int64)
+    tp = np.asarray([m.get(p.tp_axis, 1) if p.tp_axis else 1
+                     for p, m in zip(plans, mesh_shapes)], dtype=np.int64)
+    return _peak_bytes_soa(cfg, shape, plans, dp, tp)
+
+
+# ---------------------------------------------------------------------------
+# Joint plan × kernel-block co-tuning
+# ---------------------------------------------------------------------------
+
+
+def cotune_kernel_blocks(cfg: ArchConfig, shape: ShapeConfig, plan,
+                         mesh_shape: Mapping[str, int], model=None
+                         ) -> Dict[str, Dict[str, int]]:
+    """Model-chosen block sizes for the step's dominant kernels at this
+    (plan, mesh) cell's *per-device* shard shapes — the joint plan × block
+    co-tuning hook, reusing ``kernels/autotune.py``'s compiled grids."""
+    from repro.kernels import autotune
+    dp = _axis_product(mesh_shape, plan.dp_axes)
+    tp = mesh_shape.get(plan.tp_axis, 1) if plan.tp_axis else 1
+    bits = 16 if "16" in cfg.compute_dtype else 32
+    if shape.kind == "decode":
+        tok = max(shape.global_batch // dp, 1)
+        b_dev = tok
+    else:
+        b_dev = max(shape.global_batch // (dp * max(plan.microbatches, 1)),
+                    1)
+        tok = b_dev * shape.seq_len
+
+    out: Dict[str, Dict[str, int]] = {}
+    if cfg.d_ff:
+        out["matmul"] = autotune.best_block_sizes(
+            "matmul", {"M": tok, "N": max(cfg.d_ff // tp, 1),
+                       "K": cfg.d_model, "bits": bits}, model)
+    if cfg.n_heads and shape.kind != "decode":
+        out["flash_attention"] = autotune.best_block_sizes(
+            "flash_attention",
+            {"B": b_dev, "H": max(cfg.n_heads // tp, 1),
+             "KVH": max(cfg.n_kv_heads // tp, 1),
+             "Sq": shape.seq_len, "Skv": shape.seq_len,
+             "dh": cfg.head_dim_, "causal": True,
+             "window": cfg.sliding_window, "bits": bits}, model)
+    if cfg.ssm is not None and shape.kind != "decode":
+        out["ssd_scan"] = autotune.best_block_sizes(
+            "ssd_scan",
+            {"Bz": b_dev, "H": max(cfg.ssm_heads // tp, 1),
+             "L": shape.seq_len, "P": cfg.ssm.head_dim,
+             "N": cfg.ssm.d_state, "bits": bits}, model)
+    return out

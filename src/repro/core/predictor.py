@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import archcount
 from repro.core import properties as props
+from repro.core.lru import LRUCache
 from repro.core.model import LinearCostModel
 
 # --- v5e hardware constants (per chip) ---
@@ -105,9 +106,7 @@ class StepPrediction:
 
 
 def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
-    if shape.kind == "decode":
-        return {"B": shape.global_batch, "S": shape.seq_len,
-                "M": microbatches}
+    # one env for every step kind: decode's S is the KV/cache length
     return {"B": shape.global_batch, "S": shape.seq_len, "M": microbatches}
 
 
@@ -118,7 +117,10 @@ def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
 #: (cfg, kind, remat_policy) -> symcount.CompiledVector.  Step vectors are
 #: pure functions of those three; compiling once and evaluating per-env
 #: replaces the per-plan interpreted tree-walks in every plan search.
-_STEP_PV_CACHE: Dict[tuple, object] = {}
+#: Bounded LRU: each key pins a whole frozen ``ArchConfig`` (plus its
+#: compiled closures), so the cache must not grow with every config a
+#: long-lived process ever scores.
+_STEP_PV_CACHE: LRUCache = LRUCache(maxsize=64)
 
 
 def step_vector_fn(cfg: ArchConfig, kind: str,
@@ -229,12 +231,31 @@ def predict_plans(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
                   weights: ModelLike = None) -> np.ndarray:
     """Batched step-time prediction: seconds for every candidate plan.
 
-    This is the plan-search hot path.  All candidate property vectors are
-    assembled once (sharing the symbolic-count cache across plans) and scored
-    with a single matrix–vector product (``LinearCostModel.predict_many``) —
-    hundreds of plans cost one small ``A @ w``, not a Python loop of
-    per-plan inner products.
+    This is the plan-search hot path, routed through the array-batched
+    search-space engine (``core.planspace``): property vectors for the
+    whole candidate set assemble as numpy columns (compiled step vectors +
+    per-topology-class compiled collectives) and score as one weighted sum
+    — no per-plan interpreted tree-walks anywhere.  The per-plan
+    interpreted path survives as ``predict_plans_loop``, the oracle the
+    engine is tested and benchmarked against.
     """
+    weights = resolve_model(weights)
+    if not len(plans):
+        return np.zeros((0,))
+    from repro.core import planspace  # planspace sits above predictor
+    space = planspace.PlanSpace.from_product(cfg, shape, list(plans),
+                                             [dict(mesh_shape)])
+    return space.scores(weights)
+
+
+def predict_plans_loop(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+                       mesh_shape: Mapping[str, int],
+                       weights: ModelLike = None) -> np.ndarray:
+    """Reference scorer: per-plan ``plan_property_vector`` + one
+    ``predict_many``.  Semantically identical to ``predict_plans``; kept as
+    the oracle the batched engine is pinned against (tests) and the
+    baseline ``benchmarks/search_bench.py`` times the engine's speedup
+    over."""
     weights = resolve_model(weights)
     count_cache: dict = {}
     pvs: List[Dict[str, float]] = [
@@ -251,11 +272,14 @@ def rank_plans(cfg: ArchConfig, shape: ShapeConfig, plans,
     """Sort candidate plans by predicted step time (ascending) — the paper's
     §6.2 'select the optimal set of kernel configurations', realized.
 
-    Scoring goes through the batched ``predict_plans`` path."""
+    Scoring goes through the batched ``predict_plans`` path; ties break on
+    the plans' own fields (``planspace.plan_sort_key``), never on the
+    caller's enumeration order."""
+    from repro.core.planspace import plan_sort_key
     secs = predict_plans(cfg, shape, plans, mesh_shape, weights)
-    scored = sorted(zip(secs, range(len(plans)), plans),
-                    key=lambda t: (t[0], t[1]))
-    return [(float(s), p) for s, _, p in scored]
+    order = sorted(range(len(plans)),
+                   key=lambda i: (secs[i], plan_sort_key(plans[i])))
+    return [(float(secs[i]), plans[i]) for i in order]
 
 
 # ---------------------------------------------------------------------------
@@ -269,52 +293,14 @@ HBM_BYTES = 16e9  # v5e
 def estimate_peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plan,
                         mesh_shape: Mapping[str, int]) -> float:
     """Closed-form peak HBM bytes/device for a plan (napkin-math grade:
-    params + optimizer + gradients + activation working set or caches)."""
-    dp = 1
-    for ax in plan.dp_axes:
-        dp *= mesh_shape.get(ax, 1)
-    tp = mesh_shape.get(plan.tp_axis, 1) if plan.tp_axis else 1
-    P = cfg.n_params()
-    bytes_p = 2 if "16" in cfg.param_dtype else 4
-    pshard = tp * (dp if plan.fsdp else 1)
-    total = P * bytes_p / pshard
+    params + optimizer + gradients + activation working set or caches).
 
-    if shape.kind == "train":
-        opt_bytes = {"adamw": 8.0, "adafactor": 0.1, "sgd": 4.0}[cfg.optimizer]
-        total += P * opt_bytes / pshard           # optimizer state
-        total += P * 4.0 / pshard                 # f32 grads (transient)
-        if plan.fsdp and dp > 1:
-            # scan-over-layers gathers ONE layer's shard at a time
-            total += P * bytes_p / (tp * max(cfg.n_layers, 1))
-        Bm = shape.global_batch / max(plan.microbatches, 1)
-        tok = Bm * shape.seq_len / dp
-        act_shard = tp if plan.sequence_parallel else 1
-        remat = plan.remat_policy or cfg.remat_policy
-        saves = {"full": 1.0, "nothing": 1.0, "dots": 4.0,
-                 "none": 10.0, None: 1.0}[remat]
-        total += saves * cfg.n_layers * tok * cfg.d_model * 2 / act_shard
-        total += 12.0 * tok * cfg.d_model * 2 / act_shard  # live layer
-        # logits in f32 for the loss
-        total += tok * cfg.vocab_size * cfg.n_output_heads * 4 / tp
-    elif shape.kind == "prefill":
-        tok = shape.global_batch * shape.seq_len / dp
-        total += 16.0 * tok * cfg.d_model * 2 / (tp if plan.sequence_parallel else 1)
-        total += tok * cfg.vocab_size * cfg.n_output_heads * 2 / tp
-    else:  # decode: KV/SSM caches dominate
-        Bd = shape.global_batch / dp
-        if cfg.n_heads:
-            ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
-            n_attn = (cfg.n_layers // cfg.hybrid.attn_every
-                      if cfg.family == "hybrid" else cfg.n_layers)
-            kv_shard = max(len(plan.cache_seq_axes) and tp or 1,
-                           1 if plan.cache_seq_axes else
-                           min(tp, cfg.n_kv_heads))
-            total += (2 * Bd * ctx * cfg.n_kv_heads * cfg.head_dim_
-                      * 2 * n_attn) / kv_shard
-        if cfg.ssm is not None:
-            total += (cfg.n_layers * Bd * cfg.ssm_heads * cfg.ssm.head_dim
-                      * cfg.ssm.d_state * 4) / min(tp, cfg.ssm_heads)
-    return float(total)
+    The formula itself lives in ``core.planspace`` as a single numpy pass
+    over candidate arrays (``planspace.peak_bytes``); this scalar form is
+    the one-cell special case, so a batched feasibility sweep and the
+    per-plan call can never drift apart."""
+    from repro.core import planspace
+    return float(planspace.peak_bytes(cfg, shape, [plan], [mesh_shape])[0])
 
 
 def feasible(cfg: ArchConfig, shape: ShapeConfig, plan,

@@ -15,7 +15,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import predictor
+from repro.core import planspace, predictor
 from repro.distributed.plan import Plan, plan_for
 
 
@@ -27,15 +27,9 @@ class MeshOption:
 
 
 def _factorizations(n: int) -> List[Tuple[int, int]]:
-    out = []
-    d = 1
-    while d * d <= n:
-        if n % d == 0:
-            out.append((d, n // d))
-            if d != n // d:
-                out.append((n // d, d))
-        d += 1
-    return sorted(set(out))
+    """All ordered (data, model) splits of ``n`` — now shared with the
+    autoshard mesh sweep via ``core.planspace.factor_pairs``."""
+    return planspace.factor_pairs(n)
 
 
 def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
@@ -48,18 +42,28 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
     divide the model axis (checked softly — the sharding layer drops
     non-divisible axes, so these plans still *lower*, they just waste the
     axis; the predictor prices that in).
+
+    Every surviving-mesh candidate is scored with ONE batched call through
+    the array-batched search engine (``predictor.predict_plans`` →
+    ``core.planspace``) — this runs on the failure path, so the sweep must
+    stay in microseconds per candidate.
     """
     weights = predictor.resolve_model(weights)  # once, not per candidate
-    opts: List[MeshOption] = []
+    cells: List[Tuple[Plan, Dict[str, int]]] = []
     for dp, tp in _factorizations(n_devices)[:max_candidates]:
         if shape.kind == "train" and shape.global_batch % dp != 0:
             continue
-        mesh_shape = {"data": dp, "model": tp}
         plan = plan_for(cfg, shape, multi_pod=False, tp_size=tp)
         plan = dataclasses.replace(plan, dp_axes=("data",))
-        pred = predictor.predict_step(cfg, shape, plan, mesh_shape, weights)
-        opts.append(MeshOption(mesh_shape, plan, pred.seconds))
-    opts.sort(key=lambda o: o.predicted_step_s)
+        cells.append((plan, {"data": dp, "model": tp}))
+    if not cells:
+        return []
+    space = planspace.PlanSpace.from_cells(cfg, shape, cells)
+    secs = space.scores(weights)
+    opts = [MeshOption(mesh, plan, float(s))
+            for (plan, mesh), s in zip(cells, secs)]
+    opts.sort(key=lambda o: (o.predicted_step_s,
+                             planspace.mesh_sort_key(o.shape)))
     return opts
 
 

@@ -61,7 +61,10 @@ def candidate_configs(kernel, shape: Mapping[str, int],
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=512)
+# Bounded memo (LRU, like predictor._STEP_PV_CACHE): keys are the kernel
+# name plus the *sorted* shape items, so equal shapes hit regardless of
+# caller dict order, and old shapes evict instead of accumulating.
+@functools.lru_cache(maxsize=128)
 def _compiled_vector(kernel_name: str,
                      shape_items: Tuple[Tuple[str, object], ...]):
     km = kernelmodel.get(kernel_name)
@@ -124,7 +127,9 @@ def rank_block_sizes(kernel, shape: Mapping[str, int], model=None,
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=512)
+# Bounded LRU memo; the registry fingerprint ``_stamp`` is part of the key
+# so recalibration invalidates block choices tuned against a stale model.
+@functools.lru_cache(maxsize=128)
 def _best_cached(kernel_name: str, shape_items: Tuple[Tuple[str, object], ...],
                  model_name: Optional[str],
                  _stamp) -> Tuple[Tuple[str, int], ...]:

@@ -2,12 +2,14 @@
 ('select the optimal set of kernel configurations'), realized at the
 distributed-plan level.
 
-Enumerates candidate ``Plan``s for an (arch × shape × mesh) cell and scores
-them ALL with one batched matrix–vector product (``predictor.predict_plans``
-→ ``LinearCostModel.predict_many``) — the paper's 'small inner product'
-evaluation speed is exactly what makes an exhaustive plan sweep cheap.
-Optionally verifies the top-k candidates by actually lowering them (the
-expensive ground truth the model replaces).
+Enumerates candidate ``Plan``s for an (arch × shape) cell — optionally
+crossed with every mesh factorization of a device count — and scores the
+WHOLE space through the array-batched search engine (``core.planspace``):
+compiled property vectors over array environments, vectorized HBM
+feasibility, one weighted sum for the scores.  The paper's 'small inner
+product' evaluation speed is exactly what makes an exhaustive
+(plan × mesh) sweep cheap; ``benchmarks/search_bench.py`` records the
+batched engine's speedup over the per-plan interpreted loop.
 
 The cost model may be a registry device name (``--model cpu`` after running
 ``python -m repro.calibration --device cpu``), defaulting to the analytic
@@ -15,18 +17,28 @@ TPU-v5e seed.
 
     PYTHONPATH=src python -m repro.launch.autoshard --arch glm4-9b \
         --shape train_4k --model tpu-v5e
+
+    # sweep every mesh factorization of 1024 chips, co-tune kernel blocks
+    PYTHONPATH=src python -m repro.launch.autoshard --arch glm4-9b \
+        --shape train_4k --devices 1024 --tune-kernels
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import itertools
-from typing import List, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
 from repro.configs.registry import ARCHS
-from repro.core import predictor
+from repro.core import planspace, predictor
 from repro.distributed.plan import Plan, plan_for
+
+#: a ranked search result: (predicted seconds, plan, mesh shape); with
+#: ``tune_kernels`` a fourth element carries {kernel: block sizes}
+Ranked = Tuple[float, Plan, Dict[str, int]]
+RankedTuned = Tuple[float, Plan, Dict[str, int], Dict[str, Dict[str, int]]]
 
 
 def candidate_plans(cfg, shape: ShapeConfig, multi_pod: bool = False
@@ -59,27 +71,75 @@ def candidate_plans(cfg, shape: ShapeConfig, multi_pod: bool = False
     return out
 
 
+def candidate_meshes(shape: ShapeConfig, *, multi_pod: bool = False,
+                     n_devices: Optional[int] = None
+                     ) -> List[Dict[str, int]]:
+    """The mesh side of the space.  Default: the fixed 16×16 pod (2×16×16
+    multi-pod).  With ``n_devices``: every (data × model) factorization,
+    minus train meshes whose data axis doesn't divide the global batch
+    (training keeps exact batch semantics)."""
+    if n_devices is None:
+        return [{"pod": 2, "data": 16, "model": 16} if multi_pod
+                else {"data": 16, "model": 16}]
+    if multi_pod:
+        raise ValueError(
+            "multi_pod cannot be combined with an n_devices sweep: the "
+            "factorization space is 2-axis (data × model) and would "
+            "silently leave the pod axis at 1; drop --multi-pod or pass "
+            "explicit meshes")
+    meshes = planspace.mesh_factorizations(n_devices)
+    if shape.kind == "train":
+        # never empties: {data: 1, model: n} always divides the batch
+        meshes = [m for m in meshes
+                  if shape.global_batch % m["data"] == 0]
+    return meshes
+
+
 def search(arch: str, shape_name: str, *, multi_pod: bool = False,
-           model: predictor.ModelLike = None, top_k: int = 5
-           ) -> List[Tuple[float, Plan]]:
-    """Rank candidate plans under ``model`` (a ``LinearCostModel``, a
-    registry device name, or None for the analytic v5e seed)."""
+           model: predictor.ModelLike = None, top_k: int = 5,
+           n_devices: Optional[int] = None,
+           meshes: Optional[Sequence[Mapping[str, int]]] = None,
+           tune_kernels: bool = False
+           ) -> "List[Ranked] | List[RankedTuned]":
+    """Rank (plan × mesh) candidates under ``model`` (a ``LinearCostModel``,
+    a registry device name, or None for the analytic v5e seed).
+
+    Returns ``(seconds, plan, mesh)`` triples, best first.  By default the
+    mesh side is the fixed 16×16 pod (unchanged picks vs. the pre-engine
+    search); pass ``n_devices`` to sweep every mesh factorization, or
+    ``meshes`` for an explicit list.  With ``tune_kernels`` each returned
+    cell is additionally co-tuned at kernel granularity
+    (``planspace.cotune_kernel_blocks``) and the triples become
+    ``(seconds, plan, mesh, {kernel: blocks})`` quadruples.
+    """
     cfg = ARCHS[arch]
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         raise ValueError(why)
-    model = predictor.resolve_model(model)  # resolve once for the whole sweep
-    mesh_shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
-                  else {"data": 16, "model": 16})
+    # keep the unresolved form for co-tuning: autotune's block-choice memo
+    # keys on registry names / None, not on resolved model objects
+    raw_model = model
+    model = predictor.resolve_model(model)  # resolve once for the sweep
+    if meshes is None:
+        meshes = candidate_meshes(shape, multi_pod=multi_pod,
+                                  n_devices=n_devices)
     plans = candidate_plans(cfg, shape, multi_pod)
-    fits = [p for p in plans
-            if predictor.feasible(cfg, shape, p, mesh_shape)]
-    if not fits:  # degrade gracefully: report least-infeasible
-        fits = sorted(plans, key=lambda p: predictor.estimate_peak_bytes(
-            cfg, shape, p, mesh_shape))[:max(top_k, 8)]
-    ranked = predictor.rank_plans(cfg, shape, fits, mesh_shape, model)
-    return ranked[:top_k]
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+
+    fits = space.feasible_mask()
+    if fits.any():
+        space = space.subset(fits)
+    else:  # degrade gracefully: report least-infeasible
+        order = np.argsort(space.peak_bytes(), kind="stable")
+        space = space.subset(order[:max(top_k, 8)])
+    ranked = space.rank(model)[:top_k]
+    if tune_kernels:
+        return [(s, p, m,
+                 planspace.cotune_kernel_blocks(cfg, shape, p, m,
+                                                raw_model))
+                for s, p, m in ranked]
+    return ranked
 
 
 def main() -> None:
@@ -88,6 +148,11 @@ def main() -> None:
     ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--top", type=int, default=5)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="sweep every (data × model) factorization of this "
+                         "chip count instead of the fixed 16x16 mesh")
+    ap.add_argument("--tune-kernels", action="store_true",
+                    help="co-tune kernel block sizes for the ranked cells")
     ap.add_argument("--model", default=None,
                     help="cost-model registry device name (default: the "
                          "analytic tpu-v5e seed); see python -m "
@@ -95,18 +160,26 @@ def main() -> None:
     args = ap.parse_args()
 
     ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
-                    model=args.model, top_k=args.top)
+                    model=args.model, top_k=args.top,
+                    n_devices=args.devices,
+                    tune_kernels=args.tune_kernels)
     # None resolves to the built-in analytic seed, which an explicit
     # "--model tpu-v5e" does NOT (a fitted registry file would shadow it)
     model_label = args.model or "tpu-v5e analytic seed"
+    mesh_label = (f"{args.devices}-chip factorization sweep" if args.devices
+                  else ("2x16x16" if args.multi_pod else "16x16"))
     print(f"top-{args.top} plans for {args.arch} × {args.shape} "
-          f"({'2x16x16' if args.multi_pod else '16x16'}, "
-          f"model={model_label}):")
-    for t, p in ranked:
-        print(f"  {t*1e3:9.2f} ms  fsdp={p.fsdp} sp={p.sequence_parallel} "
-              f"mb={p.microbatches} remat={p.remat_policy} "
-              f"moe={p.moe_mode} comp={p.compression} "
-              f"cache_seq={p.cache_seq_axes}")
+          f"({mesh_label}, model={model_label}):")
+    for entry in ranked:
+        t, p, mesh = entry[0], entry[1], entry[2]
+        mesh_s = "x".join(f"{k}={v}" for k, v in sorted(mesh.items()))
+        print(f"  {t*1e3:9.2f} ms  [{mesh_s}] fsdp={p.fsdp} "
+              f"sp={p.sequence_parallel} mb={p.microbatches} "
+              f"remat={p.remat_policy} moe={p.moe_mode} "
+              f"comp={p.compression} cache_seq={p.cache_seq_axes}")
+        if args.tune_kernels:
+            for kern, blocks in entry[3].items():
+                print(f"{'':14}· {kern}: {blocks}")
 
 
 if __name__ == "__main__":

@@ -53,10 +53,15 @@ class StragglerMonitor:
 
         ``model`` is anything ``predictor.resolve_model`` accepts: None (the
         analytic v5e seed), a registry device name, or a ``LinearCostModel``.
+
+        The threshold is a pure step-time scalar, so it goes through the
+        same batched engine as plan search (``predictor.predict_plans`` →
+        ``core.planspace``) rather than the heavier ``predict_step``
+        (which also assembles the per-property breakdown and MFU).
         """
         from repro.core import predictor  # runtime sits above core
-        pred = predictor.predict_step(cfg, shape, plan, mesh_shape, model)
-        return cls(n_hosts=n_hosts, predicted_step_s=pred.seconds, **kw)
+        secs = predictor.predict_plans(cfg, shape, [plan], mesh_shape, model)
+        return cls(n_hosts=n_hosts, predicted_step_s=float(secs[0]), **kw)
 
     def threshold(self) -> float:
         return self.k * max(self.predicted_step_s,

@@ -1,0 +1,364 @@
+"""Array-batched search-space engine (core/planspace.py) tests.
+
+Pins the three equivalences the engine's speed claims rest on:
+
+  * compiled array-env evaluation of arbitrary ``symcount.Expr`` trees
+    matches interpreted ``Expr.eval`` pointwise (seeded random trees, plus
+    the hypothesis-driven version when hypothesis is installed);
+  * ``PlanSpace.scores`` matches the per-plan interpreted loop
+    (``predictor.predict_plans_loop``) over (plan × mesh) products;
+  * the symbolic per-topology-class collectives and the vectorized HBM
+    feasibility match their scalar references branch for branch.
+
+Plus the satellites: bounded LRU caches, deterministic rank tie-breaks,
+mesh-factorization sweeps in autoshard, batched elastic replan.
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.core import archcount, planspace, predictor
+from repro.core.lru import LRUCache
+from repro.core.symcount import (
+    Add, CeilDiv, Const, Expr, FloorDiv, Max, Min, Mul, Piecewise, Pow,
+    Var, evaluate_vector,
+)
+from repro.distributed.plan import Plan
+from repro.launch.autoshard import candidate_plans
+
+# ---------------------------------------------------------------------------
+# compiled vs interpreted Expr evaluation (property-based)
+# ---------------------------------------------------------------------------
+
+_VARS = ("x", "y", "z")
+
+
+def random_expr(rng: random.Random, depth: int) -> Expr:
+    """A random symcount tree.  Divisor operands stay positive atoms so
+    eval never divides by zero; magnitudes stay small enough that int
+    arithmetic is exact in both Python and int64 numpy."""
+    if depth <= 0 or rng.random() < 0.25:
+        r = rng.random()
+        if r < 0.45:
+            return Var(rng.choice(_VARS))
+        if r < 0.75:
+            return Const(rng.randint(1, 6))
+        return Const(round(rng.uniform(0.25, 3.0), 3))
+    op = rng.randrange(8)
+    a = random_expr(rng, depth - 1)
+    b = random_expr(rng, depth - 1)
+    if op == 0:
+        return Add(a, b)
+    if op == 1:
+        return Mul(a, b)
+    if op == 2:
+        return a - b
+    if op == 3:
+        return FloorDiv(a, Const(rng.randint(1, 5)))
+    if op == 4:
+        return CeilDiv(a, Const(rng.randint(1, 5)))
+    if op == 5:
+        return Max(a, b) if rng.random() < 0.5 else Min(a, b)
+    if op == 6:
+        return Piecewise([(a, b)], random_expr(rng, depth - 1))
+    return Pow(a, rng.choice((0, 1, 2)))
+
+
+def _check_compiled_matches_eval(seed: int) -> None:
+    rng = random.Random(seed)
+    e = random_expr(rng, depth=3)
+    envs = [{v: rng.randint(1, 24) for v in _VARS} for _ in range(32)]
+    pointwise = np.asarray([float(e.eval(env)) for env in envs])
+    arr_env = {v: np.asarray([env[v] for env in envs], dtype=np.int64)
+               for v in _VARS}
+    compiled = np.broadcast_to(
+        np.asarray(e.compile()(arr_env), dtype=np.float64), (len(envs),))
+    np.testing.assert_allclose(compiled, pointwise, rtol=1e-12, atol=0)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_compiled_expr_matches_eval_random_trees(seed):
+    _check_compiled_matches_eval(seed)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_compiled_expr_matches_eval_hypothesis(seed):
+    _check_compiled_matches_eval(seed)
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-loop golden tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sweep_cell():
+    cfg = ARCHS["smollm-360m"]
+    shape = SHAPES["train_4k"]
+    plans = candidate_plans(cfg, shape)
+    meshes = planspace.mesh_factorizations(64)
+    return cfg, shape, plans, meshes
+
+
+def test_planspace_scores_match_interpreted_loop(sweep_cell):
+    cfg, shape, plans, meshes = sweep_cell
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+    assert len(space) == len(plans) * len(meshes)
+    batched = space.scores(None)
+    loop = np.concatenate([
+        predictor.predict_plans_loop(cfg, shape, plans, m) for m in meshes])
+    # from_product is plan-major, the loop above mesh-major
+    np.testing.assert_allclose(
+        batched.reshape(len(plans), len(meshes)),
+        loop.reshape(len(meshes), len(plans)).T, rtol=1e-9)
+
+
+def test_predict_plans_routes_through_engine(sweep_cell):
+    cfg, shape, plans, _ = sweep_cell
+    mesh = {"data": 8, "model": 8}
+    np.testing.assert_allclose(
+        predictor.predict_plans(cfg, shape, plans, mesh),
+        predictor.predict_plans_loop(cfg, shape, plans, mesh), rtol=1e-9)
+
+
+def test_from_cells_matches_from_product(sweep_cell):
+    cfg, shape, plans, meshes = sweep_cell
+    prod_space = planspace.PlanSpace.from_product(cfg, shape, plans[:6],
+                                                  meshes)
+    cells = [(p, m) for p in plans[:6] for m in meshes]
+    cell_space = planspace.PlanSpace.from_cells(cfg, shape, cells)
+    np.testing.assert_array_equal(prod_space.dp, cell_space.dp)
+    np.testing.assert_array_equal(prod_space.tp, cell_space.tp)
+    np.testing.assert_array_equal(prod_space.n_dev, cell_space.n_dev)
+    np.testing.assert_allclose(prod_space.scores(None),
+                               cell_space.scores(None), rtol=0)
+
+
+def test_subset_preserves_cells(sweep_cell):
+    cfg, shape, plans, meshes = sweep_cell
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+    secs = space.scores(None)
+    mask = np.zeros(len(space), dtype=bool)
+    mask[::7] = True
+    sub = space.subset(mask)
+    assert len(sub) == int(mask.sum())
+    np.testing.assert_allclose(sub.scores(None), secs[mask], rtol=0)
+    # the precomputed evaluation groups are remapped, not recomputed
+    assert sub.remat_groups is not None and sub.topo_groups is not None
+    assert sum(len(g) for g in sub.remat_groups.values()) == len(sub)
+
+
+def test_empty_candidate_set(sweep_cell):
+    cfg, shape, _, _ = sweep_cell
+    space = planspace.PlanSpace.from_cells(cfg, shape, [])
+    assert len(space) == 0
+    assert space.scores(None).shape == (0,)
+    assert space.feasible_mask().shape == (0,)
+    assert planspace.peak_bytes(cfg, shape, [], []).shape == (0,)
+    assert space.rank(None) == []
+    assert predictor.predict_plans(cfg, shape, [], {"data": 2}).shape == (0,)
+
+
+def test_subset_with_reordering_indices(sweep_cell):
+    cfg, shape, plans, meshes = sweep_cell
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+    secs = space.scores(None)
+    order = np.argsort(space.peak_bytes(), kind="stable")[:37][::-1]
+    sub = space.subset(order)
+    np.testing.assert_allclose(sub.scores(None), secs[order], rtol=0)
+    assert [id(p) for p in sub.plans] == [id(space.plans[i]) for i in order]
+
+
+# ---------------------------------------------------------------------------
+# symbolic collectives vs the scalar reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "mixtral-8x7b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_collective_symbolic_matches_scalar(arch, kind):
+    cfg = ARCHS[arch]
+    env = {"B": 64, "S": 2048}
+    for fsdp in (True, False):
+        for compression in (None, "int8_ef"):
+            for moe_mode in (("tp", "ep") if cfg.moe else ("tp",)):
+                for dp, tp in ((1, 1), (1, 16), (16, 1), (4, 8)):
+                    for mb in (1, 4):
+                        plan = Plan(dp_axes=("data",), fsdp=fsdp,
+                                    microbatches=mb, moe_mode=moe_mode,
+                                    compression=compression)
+                        mesh = {"data": dp, "model": tp}
+                        ref = evaluate_vector(
+                            archcount.collective_counts(cfg, kind, plan,
+                                                        mesh), env)
+                        sym = evaluate_vector(
+                            archcount.collective_counts_symbolic(
+                                cfg, kind,
+                                archcount.collective_topology(plan)),
+                            {**env, "M": mb, "DP": dp, "TP": tp})
+                        for k, v in ref.items():
+                            assert sym[k] == pytest.approx(v, rel=1e-12), \
+                                (k, fsdp, compression, moe_mode, dp, tp)
+                        for k, v in sym.items():  # extra keys must be gated off
+                            if k not in ref:
+                                assert v == 0.0, (k, dp, tp)
+
+
+# ---------------------------------------------------------------------------
+# vectorized HBM feasibility vs the scalar formula
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,shname", [
+    ("glm4-9b", "train_4k"), ("glm4-9b", "prefill_32k"),
+    ("mixtral-8x7b", "decode_32k"), ("mamba2-370m", "decode_32k"),
+    ("zamba2-2.7b", "train_4k")])
+def test_peak_bytes_batched_matches_scalar(arch, shname):
+    cfg, shape = ARCHS[arch], SHAPES[shname]
+    plans = candidate_plans(cfg, shape)
+    meshes = planspace.mesh_factorizations(256)
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+    batched = space.peak_bytes()
+    assert batched.shape == (len(space),)
+    rng = random.Random(0)
+    for i in rng.sample(range(len(space)), 25):
+        scalar = predictor.estimate_peak_bytes(
+            cfg, shape, space.plans[i], space.mesh_shapes[i])
+        assert batched[i] == scalar, i
+    mask = space.feasible_mask()
+    assert mask.dtype == bool and mask.shape == (len(space),)
+
+
+# ---------------------------------------------------------------------------
+# mesh factorizations
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_factorizations_cover_all_splits():
+    meshes = planspace.mesh_factorizations(64)
+    assert all(m["data"] * m["model"] == 64 for m in meshes)
+    assert len(meshes) == len({(m["data"], m["model"]) for m in meshes}) == 7
+    assert {m["data"] for m in meshes} == {1, 2, 4, 8, 16, 32, 64}
+    # non-power-of-two counts factor too
+    assert all(m["data"] * m["model"] == 48
+               for m in planspace.mesh_factorizations(48))
+    with pytest.raises(ValueError):
+        planspace.mesh_factorizations(8, axes=("a", "b", "c"))
+
+
+def test_elastic_factorizations_alias():
+    from repro.distributed import elastic
+    assert elastic._factorizations(36) == planspace.factor_pairs(36)
+
+
+# ---------------------------------------------------------------------------
+# autoshard mesh sweep + co-tuning
+# ---------------------------------------------------------------------------
+
+
+def test_autoshard_search_default_mesh_unchanged():
+    from repro.launch import autoshard
+    ranked = autoshard.search("smollm-360m", "train_4k", top_k=3)
+    assert all(mesh == {"data": 16, "model": 16} for _, _, mesh in ranked)
+    secs = [s for s, _, _ in ranked]
+    assert secs == sorted(secs)
+
+
+def test_autoshard_search_mesh_sweep():
+    from repro.launch import autoshard
+    ranked = autoshard.search("smollm-360m", "train_4k", n_devices=64,
+                              top_k=8)
+    assert ranked
+    assert all(mesh["data"] * mesh["model"] == 64 for _, _, mesh in ranked)
+    # training keeps exact batch semantics: dp divides the global batch
+    assert all(SHAPES["train_4k"].global_batch % mesh["data"] == 0
+               for _, _, mesh in ranked)
+    secs = [s for s, _, _ in ranked]
+    assert secs == sorted(secs)
+    # the sweep can only improve on (or match) the fixed default mesh
+    fixed = autoshard.search("smollm-360m", "train_4k",
+                             meshes=[{"data": 8, "model": 8}], top_k=1)
+    assert ranked[0][0] <= fixed[0][0] + 1e-12
+
+
+def test_autoshard_multi_pod_rejects_device_sweep():
+    from repro.launch import autoshard
+    with pytest.raises(ValueError, match="multi_pod"):
+        autoshard.search("smollm-360m", "train_4k", multi_pod=True,
+                         n_devices=64)
+
+
+def test_autoshard_tune_kernels_quadruples():
+    from repro.launch import autoshard
+    ranked = autoshard.search("smollm-360m", "train_4k", top_k=2,
+                              tune_kernels=True)
+    for entry in ranked:
+        assert len(entry) == 4
+        blocks = entry[3]
+        assert "matmul" in blocks and "flash_attention" in blocks
+        assert set(blocks["matmul"]) == {"block_m", "block_n", "block_k"}
+        assert all(isinstance(v, int) for b in blocks.values()
+                   for v in b.values())
+
+
+# ---------------------------------------------------------------------------
+# batched elastic replan / straggler threshold
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_replan_matches_predict_step():
+    from repro.distributed import elastic
+    cfg, shape = ARCHS["smollm-360m"], SHAPES["train_4k"]
+    opts = elastic.replan(cfg, shape, 64)
+    assert opts
+    for o in opts:
+        ref = predictor.predict_step(cfg, shape, o.plan, o.shape).seconds
+        assert o.predicted_step_s == pytest.approx(ref, rel=1e-9)
+    secs = [o.predicted_step_s for o in opts]
+    assert secs == sorted(secs)
+
+
+# ---------------------------------------------------------------------------
+# deterministic tie-breaks + bounded caches
+# ---------------------------------------------------------------------------
+
+
+def test_rank_plans_tie_break_is_enumeration_order_free():
+    from repro.core.model import LinearCostModel
+    cfg, shape = ARCHS["smollm-360m"], SHAPES["train_4k"]
+    plans = candidate_plans(cfg, shape)
+    # a model that scores every plan identically: only const1 is priced
+    flat = LinearCostModel(keys=["const1"], weights=np.array([1.0]),
+                           device="flat")
+    mesh = {"data": 8, "model": 8}
+    a = predictor.rank_plans(cfg, shape, plans, mesh, flat)
+    shuffled = list(plans)
+    random.Random(3).shuffle(shuffled)
+    b = predictor.rank_plans(cfg, shape, shuffled, mesh, flat)
+    assert [p for _, p in a] == [p for _, p in b]
+
+
+def test_lru_cache_bounds_and_recency():
+    c = LRUCache(maxsize=3)
+    for i in range(3):
+        c[i] = i * 10
+    assert c.get(0) == 0          # refresh 0
+    c[3] = 30                     # evicts 1 (LRU), not 0
+    assert 0 in c and 3 in c and 1 not in c and len(c) == 3
+    c[0] = 99                     # overwrite refreshes too
+    assert c.get(0) == 99
+    with pytest.raises(ValueError):
+        LRUCache(0)
+
+
+def test_step_pv_cache_is_bounded_lru():
+    assert isinstance(predictor._STEP_PV_CACHE, LRUCache)
+    assert predictor._STEP_PV_CACHE.maxsize <= 128
+    assert isinstance(planspace._COLL_CV_CACHE, LRUCache)
