@@ -1,0 +1,159 @@
+"""Fused-engine benchmark: the basis-program GEMV scorer
+(``core.exprops`` + ``PlanSpace.scores``) against the PR 3 per-key column
+engine (``PlanSpace.scores_columns``) and the interpreted per-plan loop
+(``predictor.predict_plans_loop``), plus a ≥1M-cell STREAMED sweep
+(``planspace.stream_topk``) in bounded memory.
+
+    PYTHONPATH=src python -m benchmarks.fused_bench \
+        [--arch glm4-9b] [--shape train_4k] [--target-cells 10000] \
+        [--stream-cells 1000000] [--repeats 5] [--out BENCH_fused.json]
+
+Writes repo-root ``BENCH_fused.json`` (schema: ``cells``,
+``us_per_cell``, ``speedup``, ``baseline`` + per-engine timings and the
+stream section).  CI runs this on every PR and fails when the fused
+engine's speedup over the column baseline drops below 5× (or below 100×
+over the interpreted loop).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import time
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.core import planspace, predictor
+from repro.launch.autoshard import candidate_plans
+from benchmarks.search_bench import build_space, time_fn
+
+#: acceptance bars (also asserted by CI on the emitted JSON)
+SPEEDUP_BAR_COLUMNS = 5.0
+SPEEDUP_BAR_LOOP = 100.0
+
+
+def stream_meshes(plans, target_cells: int):
+    """Mesh factorizations of every chip count 2, 3, … until the product
+    space crosses ``target_cells`` — the irregular many-mesh side of the
+    streamed sweep."""
+    meshes = []
+    n = 2
+    while len(plans) * len(meshes) < target_cells:
+        meshes.extend(planspace.mesh_factorizations(n))
+        n += 1
+    return meshes
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="glm4-9b", choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
+    ap.add_argument("--target-cells", type=int, default=10000)
+    ap.add_argument("--stream-cells", type=int, default=1_000_000)
+    ap.add_argument("--chunk-cells", type=int, default=65536)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--model", default=None)
+    ap.add_argument("--out", default="BENCH_fused.json")
+    args = ap.parse_args(argv)
+
+    cfg, shape = ARCHS[args.arch], SHAPES[args.shape]
+    model = predictor.resolve_model(args.model)
+    plans, meshes = build_space(cfg, shape, args.target_cells)
+    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+    n_cells = len(space)
+    print(f"sweep: {len(plans)} plans × {len(meshes)} meshes = "
+          f"{n_cells} cells ({args.arch} × {args.shape})")
+
+    # equivalence first (and cache warming): fused ≡ columns ≡ loop
+    fused = space.scores(model)
+    cols = space.scores_columns(model)
+    loop = np.concatenate([
+        predictor.predict_plans_loop(cfg, shape, plans, m, model)
+        for m in meshes])
+    np.testing.assert_allclose(fused, cols, rtol=1e-9)
+    np.testing.assert_allclose(   # from_product is plan-major; loop mesh-major
+        fused.reshape(len(plans), len(meshes)),
+        loop.reshape(len(meshes), len(plans)).T, rtol=1e-9)
+    print("fused ≡ columns ≡ loop at rtol 1e-9")
+
+    fused_s = time_fn(lambda: space.scores(model), args.repeats)
+    cols_s = time_fn(lambda: space.scores_columns(model), args.repeats)
+    loop_s = time_fn(lambda: [predictor.predict_plans_loop(
+        cfg, shape, plans, m, model) for m in meshes], 1)
+
+    # the streamed sweep: ≥1M cells, bounded memory, HBM pruning
+    splans = candidate_plans(cfg, shape)
+    smeshes = stream_meshes(splans, args.stream_cells)
+    stream_stats: dict = {}
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    t0 = time.perf_counter()
+    top = planspace.stream_topk(cfg, shape, splans, smeshes, model, k=10,
+                                chunk_cells=args.chunk_cells,
+                                hbm_budget=predictor.HBM_BYTES,
+                                stats=stream_stats)
+    stream_t = time.perf_counter() - t0
+    rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+    result = {
+        "benchmark": "fused_bench",
+        "arch": args.arch,
+        "shape": args.shape,
+        "cells": n_cells,
+        "us_per_cell": fused_s / n_cells * 1e6,
+        "speedup": cols_s / fused_s,
+        "baseline": "planspace_scores_columns",
+        "repeats": args.repeats,
+        "fused_s": fused_s,
+        "columns_s": cols_s,
+        "loop_s": loop_s,
+        "columns_us_per_cell": cols_s / n_cells * 1e6,
+        "loop_us_per_cell": loop_s / n_cells * 1e6,
+        "loop_speedup": loop_s / fused_s,
+        "scores_match_rtol": 1e-9,
+        "model": model.device,
+        "stream": {
+            "cells": stream_stats.get("cells", 0),
+            "seconds": stream_t,
+            "us_per_cell": stream_t / max(stream_stats.get("cells", 1), 1)
+                           * 1e6,
+            "chunk_cells": args.chunk_cells,
+            "top_k": len(top),
+            "best_seconds": top[0][0] if top else None,
+            "rss_delta_mib": (rss1 - rss0) / 1024.0,
+            **stream_stats,
+        },
+    }
+    print(f"loop:    {loop_s*1e3:9.1f} ms ({result['loop_us_per_cell']:.2f}"
+          f" µs/cell)")
+    print(f"columns: {cols_s*1e3:9.2f} ms "
+          f"({result['columns_us_per_cell']:.3f} µs/cell)")
+    print(f"fused:   {fused_s*1e3:9.3f} ms "
+          f"({result['us_per_cell']:.4f} µs/cell)")
+    print(f"speedup: {result['speedup']:.1f}x over columns, "
+          f"{result['loop_speedup']:.0f}x over the interpreted loop")
+    print(f"stream:  {stream_stats.get('cells', 0)} cells in "
+          f"{stream_t:.2f} s, max chunk "
+          f"{stream_stats.get('max_chunk_cells', 0)} cells, pool high-water "
+          f"{stream_stats.get('pool_high_water', 0)}, "
+          f"{stream_stats.get('pruned_cells', 0)} pruned")
+    if args.out:
+        d = os.path.dirname(args.out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+    if result["speedup"] < SPEEDUP_BAR_COLUMNS:
+        print(f"WARNING: fused speedup below the "
+              f"{SPEEDUP_BAR_COLUMNS}x bar over the column engine")
+    if result["loop_speedup"] < SPEEDUP_BAR_LOOP:
+        print(f"WARNING: fused speedup below the "
+              f"{SPEEDUP_BAR_LOOP}x bar over the interpreted loop")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,15 @@ environments) — checks the two agree, and records wall times + speedup.
 
     PYTHONPATH=src python -m benchmarks.search_bench \
         [--arch glm4-9b] [--shape train_4k] [--target-cells 10000] \
-        [--repeats 3] [--out experiments/BENCH_search.json]
+        [--repeats 3] [--out BENCH_search.json]
 
-CI runs this and uploads the JSON; the acceptance bar is a ≥20× batched
-speedup at ≥10k cells (see ISSUE/EXPERIMENTS.md).
+The JSON lands at the REPO ROOT (so the perf trajectory is visible in the
+tree, not buried under experiments/) with the shared benchmark schema —
+``cells``, ``us_per_cell``, ``speedup``, ``baseline`` — plus the raw
+timings.  CI runs this and uploads the JSON; the acceptance bar is a ≥20×
+batched speedup at ≥10k cells.  ``benchmarks/fused_bench.py`` measures
+the fused GEMV engine against the column engine the same way →
+``BENCH_fused.json``.
 """
 from __future__ import annotations
 
@@ -60,7 +65,7 @@ def main(argv=None) -> dict:
     ap.add_argument("--target-cells", type=int, default=10000)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--model", default=None)
-    ap.add_argument("--out", default="experiments/BENCH_search.json")
+    ap.add_argument("--out", default="BENCH_search.json")
     args = ap.parse_args(argv)
 
     cfg, shape = ARCHS[args.arch], SHAPES[args.shape]
@@ -100,11 +105,14 @@ def main(argv=None) -> dict:
         "shape": args.shape,
         "n_plans": len(plans),
         "n_meshes": len(meshes),
-        "n_cells": n_cells,
+        "cells": n_cells,
+        "n_cells": n_cells,            # legacy alias of "cells"
+        "us_per_cell": batched_s / n_cells * 1e6,
+        "speedup": speedup,
+        "baseline": "predict_plans_loop",
         "repeats": args.repeats,
         "loop_s": loop_s,
         "batched_s": batched_s,
-        "speedup": speedup,
         "loop_us_per_cell": loop_s / n_cells * 1e6,
         "batched_us_per_cell": batched_s / n_cells * 1e6,
         "model": model.device,

@@ -67,6 +67,25 @@ def save_model(model: LinearCostModel, registry_dir: Optional[str] = None,
     return path
 
 
+#: analytic seeds are pure functions of the datasheet constants, so one
+#: shared instance per name serves every caller.  Returning the SAME
+#: object each time also lets identity-keyed downstream memos hit — the
+#: fused engine's per-program weight folds (``exprops.BasisProgram``)
+#: cache per model instance, and the replan/straggler fast paths resolve
+#: a model on every call.  Treated as read-only everywhere.
+_SEED_CACHE: Dict[str, LinearCostModel] = {}
+
+
+def _analytic_seed(device: str) -> Optional[LinearCostModel]:
+    model = _SEED_CACHE.get(device)
+    if model is None:
+        builder = seeds.ANALYTIC_SEEDS.get(device)
+        if builder is None:
+            return None
+        model = _SEED_CACHE[device] = builder()
+    return model
+
+
 def load_model(device: str, registry_dir: Optional[str] = None
                ) -> LinearCostModel:
     """Load the model for ``device``: fitted registry file first, then the
@@ -75,9 +94,9 @@ def load_model(device: str, registry_dir: Optional[str] = None
     path = _model_path(registry_dir, device)
     if os.path.exists(path):
         return LinearCostModel.load(path)
-    builder = seeds.ANALYTIC_SEEDS.get(device)
-    if builder is not None:
-        return builder()
+    model = _analytic_seed(device)
+    if model is not None:
+        return model
     raise UnknownDeviceError(device, list_models(registry_dir))
 
 
@@ -127,10 +146,10 @@ def resolve_model(model, default: str = "tpu-v5e",
     straggler / elastic layers call), plus the ``registry_dir`` override.
     """
     if model is None:
-        builder = seeds.ANALYTIC_SEEDS.get(default)
-        if builder is None:
+        seed = _analytic_seed(default)
+        if seed is None:
             raise UnknownDeviceError(default, list_models(registry_dir))
-        return builder()
+        return seed
     if isinstance(model, str):
         return load_model(model, registry_dir)
     if isinstance(model, LinearCostModel):

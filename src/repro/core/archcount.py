@@ -412,7 +412,12 @@ def collective_counts_symbolic(cfg: ArchConfig, kind: str,
         a2a = tok * d * bytes_per * cfg.moe.top_k * 2.0  # dispatch + combine
         out[props.coll_key("all_to_all")] = Piecewise(
             [(TP - 1, a2a * ((TP - 1) / TP))], zero)
-    return out
+    # canonicalize: the gate/traffic products above repeat subterms (the
+    # (DP-1)/DP wire factors, the TP-sharded byte counts); simplifying here
+    # benefits both the per-property compiled vectors and the fused basis
+    # programs built from this map
+    from repro.core import exprops
+    return {k: exprops.simplify(v) for k, v in out.items()}
 
 
 def collective_counts(cfg: ArchConfig, kind: str, plan, mesh_shape:

@@ -410,7 +410,15 @@ def step_compute_vector(cfg, kind: str = "train") -> Dict[str, ExprLike]:
     """The summed compute-side (mxu + VMEM local) vector of one forward
     pass, built from the per-kernel vectors.  barrier/groups/const1 stay at
     STEP granularity (archcount's), not per-launch — a fitted per-launch
-    barrier weight does not add up across thousands of fused launches."""
+    barrier weight does not add up across thousands of fused launches.
+
+    Entries are CANONICALIZED (``exprops.simplify``): the layer-by-layer
+    composition piles up dozens of structurally repeated addends (every
+    projection matmul contributes the same CeilDiv tiles), and collapsing
+    them here shrinks both the per-property compiled closures and the
+    fused basis programs built downstream."""
+    from repro.core import exprops
     total = add_vectors(*step_kernel_vectors(cfg, kind).values())
     keep = ("mxu:", "local:")
-    return {k: v for k, v in total.items() if k.startswith(keep)}
+    return {k: exprops.simplify(v) for k, v in total.items()
+            if k.startswith(keep)}

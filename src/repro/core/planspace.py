@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import archcount
+from repro.core import exprops
 from repro.core import predictor
 from repro.core import properties as props
 from repro.core.lru import LRUCache
@@ -51,6 +52,9 @@ Cell = Tuple[object, Mapping[str, int]]  # (Plan, mesh_shape)
 #: and each entry pins a whole ArchConfig, so evict beyond recent use.
 _COLL_CV_CACHE: LRUCache = LRUCache(maxsize=128)
 
+#: (cfg, kind, topology-class) -> exprops.BasisProgram (the fused form).
+_COLL_PROG_CACHE: LRUCache = LRUCache(maxsize=128)
+
 
 def _collective_vector_fn(cfg: ArchConfig, kind: str, topology):
     from repro.core.symcount import compile_vector
@@ -61,6 +65,21 @@ def _collective_vector_fn(cfg: ArchConfig, kind: str, topology):
             archcount.collective_counts_symbolic(cfg, kind, topology))
         _COLL_CV_CACHE[key] = cv
     return cv
+
+
+def _collective_program(cfg: ArchConfig, kind: str, topology):
+    """Fused basis program for one (kind, topology-class): the symbolic
+    collectives canonicalized + CSE'd into one GEMV scorer, persisted in
+    the on-disk compile cache like the step programs."""
+    key = (cfg, kind, topology)
+    prog = _COLL_PROG_CACHE.get(key)
+    if prog is None:
+        dk = exprops.program_key("coll", cfg, kind, topology)
+        prog = exprops.load_or_build(
+            dk, lambda: archcount.collective_counts_symbolic(cfg, kind,
+                                                             topology))
+        _COLL_PROG_CACHE[key] = prog
+    return prog
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +145,112 @@ def mesh_sort_key(mesh: Mapping[str, int]) -> tuple:
     return tuple(sorted(mesh.items()))
 
 
+def _key_column(objs: Sequence, keyfn) -> np.ndarray:
+    """Sort-key tuples → an int64 ordinal column whose numeric order is the
+    tuples' lexicographic order (equal tuples ⇒ equal ordinals) — what lets
+    ``np.lexsort`` replace a Python tuple-key sort.  Key computation is
+    memoized per object identity: candidate spaces repeat a small set of
+    plan/mesh objects across many cells."""
+    memo: Dict[int, tuple] = {}
+    keys = []
+    for o in objs:
+        k = memo.get(id(o))
+        if k is None:
+            k = keyfn(o)
+            memo[id(o)] = k
+        keys.append(k)
+    rank = {k: i for i, k in enumerate(sorted(set(keys)))}
+    return np.asarray([rank[k] for k in keys], dtype=np.int64)
+
+
+def _rank_order(secs: np.ndarray, plans: Sequence,
+                meshes: Sequence[Mapping[str, int]]) -> np.ndarray:
+    """The ``rank`` ordering as one vectorized ``np.lexsort`` over
+    (seconds, plan-key ordinal, mesh-key ordinal) — identical to sorting
+    with ``key=lambda i: (secs[i], plan_sort_key(...), mesh_sort_key(...))``
+    and pinned against that reference in tests."""
+    return np.lexsort((_key_column(meshes, mesh_sort_key),
+                       _key_column(plans, plan_sort_key),
+                       secs))
+
+
+@dataclass
+class _ProductInfo:
+    """The factored structure of a ``from_product`` space — what lets the
+    fused scorer evaluate per (plan-profile × mesh) instead of per cell.
+
+    A product space's environment columns are rank-1: every step-term row
+    repeats one of ``n_plans`` microbatch counts, every collective row is
+    one of a handful of (microbatches, dp-axes, tp-axis) *profiles* crossed
+    with the mesh list.  Scoring therefore needs one program evaluation of
+    size ≈ n_profiles·n_meshes per group, expanded to cells by
+    repeat/tile-shaped gathers — the basis matrix never reaches n_cells
+    rows."""
+    n_m: int
+    mesh_ndev: np.ndarray                     # (n_m,)
+    dp_rows: Dict[tuple, np.ndarray]          # dp_axes -> (n_m,)
+    tp_rows: Dict[Optional[str], np.ndarray]  # tp_axis -> (n_m,)
+    plan_mb: np.ndarray                       # (n_p,)
+    plan_dp_axes: List[tuple]
+    plan_tp_axis: List[Optional[str]]
+    remat_plan_groups: Dict[object, np.ndarray]  # PLAN (not cell) indices
+    topo_plan_groups: Dict[object, np.ndarray]
+    #: lazily built evaluation structure (model-independent): see
+    #: ``step_envs`` / ``topo_envs``
+    _step_envs: Optional[list] = field(default=None, repr=False)
+    _topo_envs: Optional[tuple] = field(default=None, repr=False)
+
+    def step_envs(self) -> list:
+        """[(remat, plan-idx array, unique microbatches, inverse)] — the
+        distinct step environments per remat schedule."""
+        if self._step_envs is None:
+            out = []
+            for remat, pidx in self.remat_plan_groups.items():
+                mbs = self.plan_mb[pidx].tolist()
+                umb = sorted(set(mbs))
+                pos = {v: i for i, v in enumerate(umb)}
+                inv = np.asarray([pos[v] for v in mbs], dtype=np.intp)
+                out.append((remat, pidx, np.asarray(umb, dtype=np.int64),
+                            inv))
+            self._step_envs = out
+        return self._step_envs
+
+    def topo_envs(self) -> tuple:
+        """(per-group [(topo, n_prof, M, DP, TP columns)], global plan →
+        profile-row index) — the (profile × mesh) collective environments,
+        rows concatenated across topology groups."""
+        if self._topo_envs is None:
+            n_m = self.n_m
+            mb_l = self.plan_mb.tolist()
+            prof_row = np.empty(len(mb_l), dtype=np.intp)
+            groups = []
+            base = 0
+            for topo, pidx in self.topo_plan_groups.items():
+                profiles: Dict[tuple, int] = {}
+                envs: List[tuple] = []
+                for p in pidx.tolist():
+                    key = (mb_l[p], self.plan_dp_axes[p],
+                           self.plan_tp_axis[p])
+                    k = profiles.get(key)
+                    if k is None:
+                        k = profiles[key] = len(envs)
+                        envs.append(key)
+                    prof_row[p] = base + k
+                n_prof = len(envs)
+                Mc = np.empty(n_prof * n_m, dtype=np.int64)
+                DPc = np.empty(n_prof * n_m, dtype=np.int64)
+                TPc = np.empty(n_prof * n_m, dtype=np.int64)
+                for k, (mb, dpa, tpa) in enumerate(envs):
+                    sl = slice(k * n_m, (k + 1) * n_m)
+                    Mc[sl] = mb
+                    DPc[sl] = self.dp_rows[dpa]
+                    TPc[sl] = self.tp_rows[tpa]
+                groups.append((topo, n_prof, Mc, DPc, TPc))
+                base += n_prof
+            self._topo_envs = (groups, prof_row, base)
+        return self._topo_envs
+
+
 @dataclass
 class PlanSpace:
     """A candidate set of (plan, mesh) cells as struct-of-arrays.
@@ -147,6 +272,23 @@ class PlanSpace:
     #: n_plans × n_meshes cells): {group_key: (n_group_cells,) intp}
     remat_groups: Optional[Dict[object, np.ndarray]] = field(default=None)
     topo_groups: Optional[Dict[object, np.ndarray]] = field(default=None)
+    #: set by ``from_product`` only; ``subset`` drops it (a filtered space
+    #: loses the rank-1 structure) and the scorers fall back to the generic
+    #: unique-row path
+    product: Optional[_ProductInfo] = field(default=None, repr=False)
+    #: per-space memo of the group → BasisProgram lookups (saves re-hashing
+    #: the frozen ArchConfig key on every repeat ``scores`` call)
+    _progs: Dict[object, object] = field(default_factory=dict, repr=False)
+
+    def _group_program(self, kind: str, group_key, remat) -> object:
+        prog = self._progs.get(group_key)
+        if prog is None:
+            if group_key[0] == "step":
+                prog = predictor.step_program(self.cfg, kind, remat)
+            else:
+                prog = _collective_program(self.cfg, kind, remat)
+            self._progs[group_key] = prog
+        return prog
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -197,22 +339,29 @@ class PlanSpace:
         tp = np.concatenate([tp_rows[p.tp_axis] for p in plans]) \
             if n_p else np.zeros(0, dtype=np.int64)
         n_dev = np.tile(mesh_ndev, n_p)
-        mb = np.repeat(np.asarray([p.microbatches for p in plans],
-                                  dtype=np.int64), n_m)
+        plan_mb = np.asarray([p.microbatches for p in plans],
+                             dtype=np.int64)
+        mb = np.repeat(plan_mb, n_m)
 
         def expand(groups: Dict[object, np.ndarray]):
             j = np.arange(n_m, dtype=np.intp)
             return {k: (idx[:, None] * n_m + j).ravel()
                     for k, idx in groups.items()}
-
-        remat = expand(_group_indices([p.remat_policy for p in plans]))
-        topo = expand(_group_indices(
-            [archcount.collective_topology(p) for p in plans]))
+        remat_p = _group_indices([p.remat_policy for p in plans])
+        topo_p = _group_indices(
+            [archcount.collective_topology(p) for p in plans])
+        info = _ProductInfo(
+            n_m=n_m, mesh_ndev=mesh_ndev, dp_rows=dp_rows, tp_rows=tp_rows,
+            plan_mb=plan_mb,
+            plan_dp_axes=[p.dp_axes for p in plans],
+            plan_tp_axis=[p.tp_axis for p in plans],
+            remat_plan_groups=remat_p, topo_plan_groups=topo_p)
         return cls(cfg=cfg, shape=shape,
                    plans=[p for p in plans for _ in range(n_m)],
                    mesh_shapes=meshes * n_p,
                    dp=dp, tp=tp, n_dev=n_dev, microbatches=mb,
-                   remat_groups=remat, topo_groups=topo)
+                   remat_groups=expand(remat_p), topo_groups=expand(topo_p),
+                   product=info)
 
     def __len__(self) -> int:
         return len(self.plans)
@@ -295,10 +444,100 @@ class PlanSpace:
         return out
 
     # -- scoring -----------------------------------------------------------
-    def scores(self, model=None) -> np.ndarray:
-        """Predicted step seconds for every cell — `<α, p>` as a weighted
-        sum of property columns (identical to ``predict_many`` restricted
-        to the model's keys, without materializing the dense matrix)."""
+    def scores(self, model=None, cache=None) -> np.ndarray:
+        """Predicted step seconds for every cell, through the FUSED basis
+        programs (``core.exprops``): per evaluation group the model's
+        weights fold through the program's coefficient matrix into one
+        per-term vector, the deduped basis terms evaluate once per UNIQUE
+        environment row, and the group scores as a single GEMV — `<α, p>`
+        with the linearity exploited end to end.  ``cache`` (an
+        ``exprops.BasisCache``) switches to incremental per-column
+        evaluation for warm rescores.  ``scores_columns`` is the per-key
+        column path this is pinned against (rtol ≤ 1e-9)."""
+        m = predictor.resolve_model(model)
+        n = len(self)
+        kind = self.shape.kind
+        B, S = self.shape.global_batch, self.shape.seq_len
+        w1 = 0.0
+        for k, w in zip(m.keys, m.weights):
+            if k == props.CONST1:
+                w1 = float(w)
+        total = np.full(n, w1, dtype=np.float64)
+        if not n:
+            return total
+        if self.product is not None and cache is None:
+            return self._scores_product(m, total)
+
+        remat_groups = self.remat_groups if self.remat_groups is not None \
+            else _group_indices([p.remat_policy for p in self.plans])
+        for remat, idx in remat_groups.items():
+            prog = predictor.step_program(self.cfg, kind, remat)
+            env = {"B": B, "S": S, "M": self.microbatches[idx]}
+            s = exprops.score_cells(prog, env, len(idx), m, cache)
+            total[idx] += s / self.n_dev[idx]   # SPMD work division
+
+        topo_groups = self.topo_groups if self.topo_groups is not None \
+            else _group_indices(
+                [archcount.collective_topology(p) for p in self.plans])
+        for topo, idx in topo_groups.items():
+            prog = _collective_program(self.cfg, kind, topo)
+            env = {"B": B, "S": S, "M": self.microbatches[idx],
+                   "DP": self.dp[idx], "TP": self.tp[idx]}
+            total[idx] += exprops.score_cells(prog, env, len(idx), m, cache)
+        return total
+
+    def _scores_product(self, m, total: np.ndarray) -> np.ndarray:
+        """The ``from_product`` fast path: the env columns are rank-1
+        (plan-profile × mesh), so each group's basis matrix is evaluated at
+        profile granularity — distinct microbatch counts for the step
+        terms, (microbatches, dp-axes, tp-axis) profiles × meshes for the
+        collectives — and the cell scores assemble as ONE outer-product
+        expression over the (n_plans, n_meshes) grid.  n_cells never
+        enters a program evaluation."""
+        pi = self.product
+        kind = self.shape.kind
+        B, S = self.shape.global_batch, self.shape.seq_len
+        n_m = pi.n_m
+        n_p = len(pi.plan_mb)
+
+        # step terms: one evaluation per DISTINCT microbatch per schedule
+        s_plan = np.zeros(n_p, dtype=np.float64)
+        for remat, pidx, umb, inv in pi.step_envs():
+            prog = self._group_program(kind, ("step", remat), remat)
+            s = np.asarray(prog.score({"B": B, "S": S, "M": umb}, m),
+                           dtype=np.float64)
+            if s.shape != umb.shape:
+                s = np.broadcast_to(s, umb.shape)
+            s_plan[pidx] = s[inv]
+
+        # collective terms: rows of a (profiles, n_m) matrix; each plan
+        # points at its profile's row
+        groups, prof_row, n_rows = pi.topo_envs()
+        S_rows = np.empty((n_rows, n_m), dtype=np.float64)
+        base = 0
+        for topo, n_prof, Mc, DPc, TPc in groups:
+            prog = self._group_program(kind, ("coll", topo), topo)
+            s = np.asarray(prog.score(
+                {"B": B, "S": S, "M": Mc, "DP": DPc, "TP": TPc}, m),
+                dtype=np.float64)
+            if s.shape != (n_prof * n_m,):
+                s = np.broadcast_to(s, (n_prof * n_m,))
+            S_rows[base:base + n_prof] = s.reshape(n_prof, n_m)
+            base += n_prof
+
+        # one outer-product assembly for the whole grid (total carries the
+        # const1 launch weight already; cells are plan-major)
+        grid = s_plan[:, None] / pi.mesh_ndev
+        if n_rows:
+            grid += S_rows[prof_row]
+        total += grid.ravel()
+        return total
+
+    def scores_columns(self, model=None) -> np.ndarray:
+        """Reference scorer: per-key weighted sum over ``property_arrays``
+        (the PR 3 column engine).  Semantically identical to ``scores``;
+        kept as the oracle the fused-GEMV path is tested against and the
+        named baseline ``benchmarks/fused_bench.py`` times it over."""
         m = predictor.resolve_model(model)
         arrs = self.property_arrays()
         total = np.zeros(len(self), dtype=np.float64)
@@ -308,13 +547,30 @@ class PlanSpace:
                 total += float(w) * col
         return total
 
-    def rank(self, model=None) -> List[Tuple[float, object, Mesh]]:
-        """All cells as (seconds, plan, mesh), ascending; ties broken on
-        plan fields then mesh shape — never on enumeration order."""
+    def rank(self, model=None, top_k: Optional[int] = None
+             ) -> List[Tuple[float, object, Mesh]]:
+        """Cells as (seconds, plan, mesh), ascending; ties broken on plan
+        fields then mesh shape — never on enumeration order.  The ordering
+        is one ``np.lexsort`` over (seconds, plan-key ordinal, mesh-key
+        ordinal) columns; ``top_k`` takes the ``np.argpartition`` fast
+        path (tie-closed at the k-th score, so the result is exactly the
+        full ranking's prefix)."""
         secs = self.scores(model)
-        order = sorted(range(len(self)),
-                       key=lambda i: (secs[i], plan_sort_key(self.plans[i]),
-                                      mesh_sort_key(self.mesh_shapes[i])))
+        n = len(self)
+        idx = np.arange(n, dtype=np.intp)
+        if top_k is not None:
+            if top_k <= 0:
+                return []
+            if top_k < n:
+                part = np.argpartition(secs, top_k - 1)[:top_k]
+                # close over ties at the boundary so the full sort's
+                # plan/mesh tie-breaks stay authoritative
+                idx = np.nonzero(secs <= secs[part].max())[0]
+        order = idx[_rank_order(secs[idx],
+                                [self.plans[i] for i in idx],
+                                [self.mesh_shapes[i] for i in idx])]
+        if top_k is not None:
+            order = order[:top_k]
         return [(float(secs[i]), self.plans[i], self.mesh_shapes[i])
                 for i in order]
 
@@ -406,6 +662,113 @@ def peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
     tp = np.asarray([m.get(p.tp_axis, 1) if p.tp_axis else 1
                      for p, m in zip(plans, mesh_shapes)], dtype=np.int64)
     return _peak_bytes_soa(cfg, shape, plans, dp, tp)
+
+
+# ---------------------------------------------------------------------------
+# Streaming sweeps — million-cell spaces in bounded memory
+# ---------------------------------------------------------------------------
+
+
+def iter_product_chunks(cfg: ArchConfig, shape: ShapeConfig,
+                        plans: Sequence, meshes: Sequence[Mapping[str, int]],
+                        chunk_cells: int = 65536):
+    """Yield ``(cell_offset, PlanSpace)`` tiles of the plan-major product
+    space, each at most ~``chunk_cells`` cells.
+
+    Tiles are themselves ``from_product`` spaces (plan-block × mesh-block),
+    so every chunk scores through the rank-1 profile fast path and its
+    cells land at ``offset + local_index`` in the full product's plan-major
+    order — per-cell results are bit-identical to scoring the whole space
+    at once, only the peak footprint changes."""
+    plans = list(plans)
+    meshes = [dict(m) for m in meshes]
+    n_p, n_m = len(plans), len(meshes)
+    if not n_p or not n_m:
+        return
+    chunk_cells = max(int(chunk_cells), 1)
+    if n_m > chunk_cells:
+        for i in range(n_p):             # one plan row, mesh-tiled
+            for j0 in range(0, n_m, chunk_cells):
+                sub = PlanSpace.from_product(
+                    cfg, shape, plans[i:i + 1],
+                    meshes[j0:j0 + chunk_cells])
+                yield i * n_m + j0, sub
+    else:
+        p_step = max(chunk_cells // n_m, 1)
+        for i0 in range(0, n_p, p_step):
+            sub = PlanSpace.from_product(cfg, shape, plans[i0:i0 + p_step],
+                                         meshes)
+            yield i0 * n_m, sub
+
+
+def stream_topk(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+                meshes: Sequence[Mapping[str, int]], model=None,
+                k: int = 5, chunk_cells: int = 65536,
+                hbm_budget: Optional[float] = None,
+                stats: Optional[dict] = None
+                ) -> List[Tuple[float, object, Mesh]]:
+    """Top-``k`` cells of a (plan × mesh) product of ANY size in bounded
+    memory: chunks stream through the fused scorer, an ``np.argpartition``
+    pool keeps only candidates at or below the running k-th score (closed
+    over ties, so the result is exactly the full ``rank``'s prefix), and
+    ``hbm_budget`` prunes infeasible cells from the pool — a chunk whose
+    cells ALL bust the budget skips scoring entirely.
+
+    Peak working set is one chunk's columns plus the candidate pool — the
+    full space's property columns are never materialized.  ``stats`` (any
+    dict) receives ``{cells, chunks, max_chunk_cells, pool_high_water,
+    pruned_cells}`` telemetry."""
+    if k <= 0:
+        return []
+    m = predictor.resolve_model(model)
+    plans = list(plans)
+    meshes = [dict(mm) for mm in meshes]
+    n_m = len(meshes)
+    best_secs = np.zeros(0, dtype=np.float64)
+    best_idx = np.zeros(0, dtype=np.int64)
+    n_chunks = max_chunk = pool_hw = pruned = total_cells = 0
+    for off, sub in iter_product_chunks(cfg, shape, plans, meshes,
+                                        chunk_cells):
+        n_chunks += 1
+        max_chunk = max(max_chunk, len(sub))
+        total_cells += len(sub)
+        gidx = off + np.arange(len(sub), dtype=np.int64)
+        if hbm_budget is not None:
+            fits = sub.feasible_mask(hbm_budget)
+            pruned += int(len(sub) - fits.sum())
+            if not fits.any():
+                continue                 # pruned before any scoring
+        secs = sub.scores(m)
+        if hbm_budget is not None:
+            secs, gidx = secs[fits], gidx[fits]
+        secs = np.concatenate([best_secs, secs])
+        gidx = np.concatenate([best_idx, gidx])
+        if len(secs) > k > 0:
+            kth = secs[np.argpartition(secs, k - 1)[k - 1]]
+            keep = secs <= kth           # tie closure at the k-th score
+            secs, gidx = secs[keep], gidx[keep]
+            if len(secs) > k + 512:
+                # massive score ties (e.g. a model blind to the mesh) would
+                # otherwise grow the pool toward n_cells; the plan/mesh
+                # tie-break order is total and stable, so truncating to
+                # exactly k through it preserves the rank-prefix contract
+                # while keeping the pool bounded
+                order = _rank_order(secs, [plans[i // n_m] for i in gidx],
+                                    [meshes[i % n_m] for i in gidx])[:k]
+                secs, gidx = secs[order], gidx[order]
+        best_secs, best_idx = secs, gidx
+        pool_hw = max(pool_hw, len(best_secs))
+    if stats is not None:
+        stats.update(cells=total_cells, chunks=n_chunks,
+                     max_chunk_cells=max_chunk, pool_high_water=pool_hw,
+                     pruned_cells=pruned)
+    if not len(best_secs):
+        return []
+    pool_plans = [plans[i // n_m] for i in best_idx]
+    pool_meshes = [meshes[i % n_m] for i in best_idx]
+    order = _rank_order(best_secs, pool_plans, pool_meshes)[:k]
+    return [(float(best_secs[i]), pool_plans[i], pool_meshes[i])
+            for i in order]
 
 
 # ---------------------------------------------------------------------------

@@ -123,9 +123,11 @@ def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
 _STEP_PV_CACHE: LRUCache = LRUCache(maxsize=64)
 
 
-def step_vector_fn(cfg: ArchConfig, kind: str,
-                   remat_policy: Optional[str] = None, _sc=None):
-    """Compiled symbolic property vector for one step of ``cfg``.
+def _step_pv_sym(cfg: ArchConfig, kind: str,
+                 remat_policy: Optional[str] = None, _sc=None):
+    """The symbolic property-vector map of one step of ``cfg`` — the shared
+    source for both the per-property compiled path (``step_vector_fn``) and
+    the fused basis program (``step_program``).
 
     For train/prefill the compute terms come from the PER-KERNEL property
     vectors (``core.kernelmodel.step_kernel_vectors``): the mxu count is the
@@ -137,27 +139,59 @@ def step_vector_fn(cfg: ArchConfig, kind: str,
     streaming attention has no Pallas kernel here).
     """
     from repro.core import kernelmodel
-    from repro.core.symcount import as_expr, compile_vector
+    from repro.core.symcount import as_expr
+    sc = _sc or archcount.counts_for(cfg, kind, remat_policy=remat_policy)
+    pv_sym = dict(sc.pv)
+    if kind in ("train", "prefill"):
+        mult = archcount.train_fwd_multiplier(cfg, remat_policy) \
+            if kind == "train" else 1.0
+        kpv = kernelmodel.step_compute_vector(cfg, kind)
+        for k, v in kpv.items():
+            scaled = as_expr(v) * mult
+            if k.startswith("mxu:"):
+                pv_sym[k] = scaled          # replaces the step count
+            else:
+                pv_sym[k] = scaled + as_expr(pv_sym[k]) \
+                    if k in pv_sym else scaled
+    return pv_sym
+
+
+def step_vector_fn(cfg: ArchConfig, kind: str,
+                   remat_policy: Optional[str] = None, _sc=None):
+    """Compiled symbolic property vector for one step of ``cfg`` (one
+    closure per property — see ``_step_pv_sym`` for what the vector holds).
+    The batched engine's hot path uses the FUSED form (``step_program``);
+    this per-property form stays as the reference the fused path is pinned
+    against, and serves ``plan_property_vector`` / ``predict_step``."""
+    from repro.core.symcount import compile_vector
     key = (cfg, kind, remat_policy)
     cv = _STEP_PV_CACHE.get(key)
     if cv is None:
-        sc = _sc or archcount.counts_for(cfg, kind,
-                                         remat_policy=remat_policy)
-        pv_sym = dict(sc.pv)
-        if kind in ("train", "prefill"):
-            mult = archcount.train_fwd_multiplier(cfg, remat_policy) \
-                if kind == "train" else 1.0
-            kpv = kernelmodel.step_compute_vector(cfg, kind)
-            for k, v in kpv.items():
-                scaled = as_expr(v) * mult
-                if k.startswith("mxu:"):
-                    pv_sym[k] = scaled          # replaces the step count
-                else:
-                    pv_sym[k] = scaled + as_expr(pv_sym[k]) \
-                        if k in pv_sym else scaled
-        cv = compile_vector(pv_sym)
+        cv = compile_vector(_step_pv_sym(cfg, kind, remat_policy, _sc=_sc))
         _STEP_PV_CACHE[key] = cv
     return cv
+
+
+#: (cfg, kind, remat) -> exprops.BasisProgram — the fused-GEMV step scorer.
+_STEP_PROG_CACHE: LRUCache = LRUCache(maxsize=64)
+
+
+def step_program(cfg: ArchConfig, kind: str,
+                 remat_policy: Optional[str] = None):
+    """The step property vector as a FUSED basis program
+    (``core.exprops``): canonicalized, cross-property CSE'd, scored as one
+    GEMV.  In-memory LRU over the persistent on-disk compile cache — the
+    disk key derives from (cfg, kind, remat) so a warm cache skips building
+    the symbolic counts entirely."""
+    from repro.core import exprops
+    key = (cfg, kind, remat_policy)
+    prog = _STEP_PROG_CACHE.get(key)
+    if prog is None:
+        dk = exprops.program_key("step", cfg, kind, remat_policy)
+        prog = exprops.load_or_build(
+            dk, lambda: _step_pv_sym(cfg, kind, remat_policy))
+        _STEP_PROG_CACHE[key] = prog
+    return prog
 
 
 def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
@@ -228,16 +262,22 @@ def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
 
 def predict_plans(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
                   mesh_shape: Mapping[str, int],
-                  weights: ModelLike = None) -> np.ndarray:
+                  weights: ModelLike = None, cache=None) -> np.ndarray:
     """Batched step-time prediction: seconds for every candidate plan.
 
     This is the plan-search hot path, routed through the array-batched
-    search-space engine (``core.planspace``): property vectors for the
-    whole candidate set assemble as numpy columns (compiled step vectors +
-    per-topology-class compiled collectives) and score as one weighted sum
-    — no per-plan interpreted tree-walks anywhere.  The per-plan
-    interpreted path survives as ``predict_plans_loop``, the oracle the
-    engine is tested and benchmarked against.
+    search-space engine (``core.planspace``): the whole candidate set
+    scores through FUSED basis programs (``core.exprops``) — deduped basis
+    terms evaluated once per unique environment row, folded model weights,
+    one GEMV — with no per-plan interpreted tree-walks anywhere.  The
+    per-plan interpreted path survives as ``predict_plans_loop``, the
+    oracle the engine is tested and benchmarked against.
+
+    ``cache`` (an ``exprops.BasisCache``) switches on incremental
+    rescoring: basis columns keyed by their own free-variable values, so a
+    repeat call after a small delta (device count, mesh shape) recomputes
+    only the touched columns — the ``elastic.replan`` /
+    ``StragglerMonitor`` fast path.
     """
     weights = resolve_model(weights)
     if not len(plans):
@@ -245,7 +285,7 @@ def predict_plans(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
     from repro.core import planspace  # planspace sits above predictor
     space = planspace.PlanSpace.from_product(cfg, shape, list(plans),
                                              [dict(mesh_shape)])
-    return space.scores(weights)
+    return space.scores(weights, cache=cache)
 
 
 def predict_plans_loop(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,

@@ -30,7 +30,16 @@ def as_expr(x: "ExprLike") -> "Expr":
 
 
 class Expr:
-    """Base class.  Immutable; hashable by structure string."""
+    """Base class.  Immutable; hashable by structure string.
+
+    Nodes never mutate after construction, so the structure string and its
+    hash are computed once and cached on the instance (``_repr_c`` /
+    ``_hash_c``): repeated hashing / equality probes — e.g. the LRU lookups
+    in ``predictor.step_vector_fn`` or the term-dedup passes in
+    ``core.exprops`` — cost O(1) tree walks, not one full re-serialization
+    per probe.  Subclasses implement ``_render`` (the one-shot serializer);
+    ``__repr__`` is final and memoizing.
+    """
 
     def eval(self, env: Mapping[str, Number]) -> Number:
         raise NotImplementedError
@@ -66,11 +75,28 @@ class Expr:
     def __truediv__(self, o):  return Mul(self, Pow(as_expr(o), -1))
     def __pow__(self, k: int): return Pow(self, k)
 
+    def _render(self) -> str:
+        raise NotImplementedError
+
+    def __repr__(self):
+        r = getattr(self, "_repr_c", None)
+        if r is None:
+            r = self._render()
+            self._repr_c = r
+        return r
+
     def __eq__(self, o):
-        return isinstance(o, Expr) and repr(self) == repr(o)
+        if self is o:
+            return True
+        return (isinstance(o, Expr) and hash(self) == hash(o)
+                and repr(self) == repr(o))
 
     def __hash__(self):
-        return hash(repr(self))
+        h = getattr(self, "_hash_c", None)
+        if h is None:
+            h = hash(repr(self))
+            self._hash_c = h
+        return h
 
 
 class Const(Expr):
@@ -83,7 +109,7 @@ class Const(Expr):
     def free_vars(self):
         return set()
 
-    def __repr__(self):
+    def _render(self):
         if isinstance(self.v, float) and self.v.is_integer():
             return repr(int(self.v))
         return repr(self.v)
@@ -104,7 +130,7 @@ class Var(Expr):
     def free_vars(self):
         return {self.name}
 
-    def __repr__(self):
+    def _render(self):
         return self.name
 
     def _emit(self, names):
@@ -121,7 +147,7 @@ class Add(Expr):
     def free_vars(self):
         return self.a.free_vars() | self.b.free_vars()
 
-    def __repr__(self):
+    def _render(self):
         return f"({self.a} + {self.b})"
 
     def _emit(self, names):
@@ -138,7 +164,7 @@ class Mul(Expr):
     def free_vars(self):
         return self.a.free_vars() | self.b.free_vars()
 
-    def __repr__(self):
+    def _render(self):
         return f"{self._p(self.a)}*{self._p(self.b)}"
 
     @staticmethod
@@ -159,7 +185,7 @@ class Pow(Expr):
     def free_vars(self):
         return self.a.free_vars()
 
-    def __repr__(self):
+    def _render(self):
         return f"{Mul._p(self.a)}^{self.k}"
 
     def _emit(self, names):
@@ -179,7 +205,7 @@ class FloorDiv(Expr):
     def free_vars(self):
         return self.a.free_vars() | self.b.free_vars()
 
-    def __repr__(self):
+    def _render(self):
         return f"floor({self.a} / {self.b})"
 
     def _emit(self, names):
@@ -197,7 +223,7 @@ class CeilDiv(Expr):
     def free_vars(self):
         return self.a.free_vars() | self.b.free_vars()
 
-    def __repr__(self):
+    def _render(self):
         return f"ceil({self.a} / {self.b})"
 
     def _emit(self, names):
@@ -215,7 +241,7 @@ class Max(Expr):
     def free_vars(self):
         return set().union(*(a.free_vars() for a in self.args))
 
-    def __repr__(self):
+    def _render(self):
         return f"max({', '.join(map(repr, self.args))})"
 
     def _emit(self, names):
@@ -235,7 +261,7 @@ class Min(Expr):
     def free_vars(self):
         return set().union(*(a.free_vars() for a in self.args))
 
-    def __repr__(self):
+    def _render(self):
         return f"min({', '.join(map(repr, self.args))})"
 
     def _emit(self, names):
@@ -268,7 +294,7 @@ class Piecewise(Expr):
             s |= g.free_vars() | v.free_vars()
         return s
 
-    def __repr__(self):
+    def _render(self):
         bs = "; ".join(f"{v} if {g}>0" for g, v in self.branches)
         return f"piecewise({bs}; else {self.otherwise})"
 

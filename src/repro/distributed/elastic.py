@@ -15,8 +15,14 @@ from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import planspace, predictor
+from repro.core import exprops, planspace, predictor
 from repro.distributed.plan import Plan, plan_for
+
+#: incremental-rescore cache for the failure path: basis columns keyed by
+#: (term, its own free-variable values), so a replan after a device-count
+#: delta recomputes only the DP/TP-dependent columns — every (B, S, M)-
+#: keyed column returns from cache and warm replans stay in microseconds.
+_BASIS_CACHE = exprops.BasisCache(maxsize=8192)
 
 
 @dataclass(frozen=True)
@@ -44,9 +50,12 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
     axis; the predictor prices that in).
 
     Every surviving-mesh candidate is scored with ONE batched call through
-    the array-batched search engine (``predictor.predict_plans`` →
-    ``core.planspace``) — this runs on the failure path, so the sweep must
-    stay in microseconds per candidate.
+    the fused search engine (``core.planspace`` → ``core.exprops``) — this
+    runs on the failure path, so the sweep must stay in microseconds per
+    candidate.  Scoring passes the module's ``exprops.BasisCache``: across
+    successive replans only the basis columns a device-count/shape delta
+    actually touches recompute (the incremental-rescore contract,
+    docs/MODEL.md §2.7).
     """
     weights = predictor.resolve_model(weights)  # once, not per candidate
     cells: List[Tuple[Plan, Dict[str, int]]] = []
@@ -59,7 +68,7 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
     if not cells:
         return []
     space = planspace.PlanSpace.from_cells(cfg, shape, cells)
-    secs = space.scores(weights)
+    secs = space.scores(weights, cache=_BASIS_CACHE)
     opts = [MeshOption(mesh, plan, float(s))
             for (plan, mesh), s in zip(cells, secs)]
     opts.sort(key=lambda o: (o.predicted_step_s,

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import kernelmodel
 from repro.core.model import LinearCostModel
-from repro.core.symcount import compile_vector, evaluate_vector
+from repro.core.symcount import evaluate_vector
 
 
 def _resolve_model(model) -> LinearCostModel:
@@ -65,35 +65,33 @@ def candidate_configs(kernel, shape: Mapping[str, int],
 # name plus the *sorted* shape items, so equal shapes hit regardless of
 # caller dict order, and old shapes evict instead of accumulating.
 @functools.lru_cache(maxsize=128)
-def _compiled_vector(kernel_name: str,
-                     shape_items: Tuple[Tuple[str, object], ...]):
+def _fused_program(kernel_name: str,
+                   shape_items: Tuple[Tuple[str, object], ...]):
+    from repro.core import exprops
     km = kernelmodel.get(kernel_name)
-    pv = km.vector(dict(shape_items), km.symbolic_blocks())
-    return compile_vector(pv)
+    dk = exprops.program_key("kernel", kernel_name, shape_items)
+    return exprops.load_or_build(
+        dk, lambda: km.vector(dict(shape_items), km.symbolic_blocks()))
 
 
 def score_configs(kernel, shape: Mapping[str, int],
                   configs: Sequence[Mapping[str, int]],
                   model=None) -> np.ndarray:
-    """Predicted seconds for every candidate — the compiled fast path.
+    """Predicted seconds for every candidate — the fused fast path.
 
-    One ``Expr.compile`` per property (shape baked in as constants, block
-    sizes free, memoized per shape), one vectorized evaluation over the
-    whole candidate grid, one weighted sum.
+    The kernel's property vector (shape baked in as constants, block sizes
+    free) lowers to one basis program (``core.exprops``: canonicalized,
+    cross-property CSE'd, memoized per shape in memory and on disk); the
+    model's weights fold through the coefficient matrix once, and the whole
+    candidate grid scores as a single GEMV.
     """
+    from repro.core import exprops
     km = kernelmodel.get(kernel)
     model = _resolve_model(model)
-    cv = _compiled_vector(km.name, tuple(sorted(shape.items())))
+    prog = _fused_program(km.name, tuple(sorted(shape.items())))
     env = {b: np.asarray([c[b] for c in configs], dtype=np.int64)
            for b in km.block_params}
-    vals = cv(env)
-    weights = dict(zip(model.keys, model.weights))
-    total = np.zeros(len(configs), dtype=np.float64)
-    for key, arr in vals.items():
-        w = weights.get(key)
-        if w:
-            total = total + w * np.asarray(arr, dtype=np.float64)
-    return total
+    return exprops.score_cells(prog, env, len(configs), model)
 
 
 def score_configs_interpreted(kernel, shape: Mapping[str, int],

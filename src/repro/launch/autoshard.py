@@ -99,7 +99,8 @@ def search(arch: str, shape_name: str, *, multi_pod: bool = False,
            model: predictor.ModelLike = None, top_k: int = 5,
            n_devices: Optional[int] = None,
            meshes: Optional[Sequence[Mapping[str, int]]] = None,
-           tune_kernels: bool = False
+           tune_kernels: bool = False,
+           stream_chunk_cells: Optional[int] = None
            ) -> "List[Ranked] | List[RankedTuned]":
     """Rank (plan × mesh) candidates under ``model`` (a ``LinearCostModel``,
     a registry device name, or None for the analytic v5e seed).
@@ -111,6 +112,12 @@ def search(arch: str, shape_name: str, *, multi_pod: bool = False,
     cell is additionally co-tuned at kernel granularity
     (``planspace.cotune_kernel_blocks``) and the triples become
     ``(seconds, plan, mesh, {kernel: blocks})`` quadruples.
+
+    ``stream_chunk_cells`` switches to the streaming engine
+    (``planspace.stream_topk``): the space scores in bounded-memory chunks
+    with HBM-infeasible cells pruned from the running top-k pool — the
+    way to sweep candidate spaces far past RAM (it does not degrade to
+    least-infeasible when nothing fits; the fully-materialized path does).
     """
     cfg = ARCHS[arch]
     shape = SHAPES[shape_name]
@@ -125,15 +132,21 @@ def search(arch: str, shape_name: str, *, multi_pod: bool = False,
         meshes = candidate_meshes(shape, multi_pod=multi_pod,
                                   n_devices=n_devices)
     plans = candidate_plans(cfg, shape, multi_pod)
-    space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
 
-    fits = space.feasible_mask()
-    if fits.any():
-        space = space.subset(fits)
-    else:  # degrade gracefully: report least-infeasible
-        order = np.argsort(space.peak_bytes(), kind="stable")
-        space = space.subset(order[:max(top_k, 8)])
-    ranked = space.rank(model)[:top_k]
+    if stream_chunk_cells is not None:
+        ranked = planspace.stream_topk(
+            cfg, shape, plans, meshes, model, k=top_k,
+            chunk_cells=stream_chunk_cells,
+            hbm_budget=predictor.HBM_BYTES)
+    else:
+        space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+        fits = space.feasible_mask()
+        if fits.any():
+            space = space.subset(fits)
+        else:  # degrade gracefully: report least-infeasible
+            order = np.argsort(space.peak_bytes(), kind="stable")
+            space = space.subset(order[:max(top_k, 8)])
+        ranked = space.rank(model, top_k=top_k)
     if tune_kernels:
         return [(s, p, m,
                  planspace.cotune_kernel_blocks(cfg, shape, p, m,
@@ -153,6 +166,9 @@ def main() -> None:
                          "chip count instead of the fixed 16x16 mesh")
     ap.add_argument("--tune-kernels", action="store_true",
                     help="co-tune kernel block sizes for the ranked cells")
+    ap.add_argument("--stream-chunk", type=int, default=None, metavar="N",
+                    help="score the sweep in streamed chunks of ~N cells "
+                         "(bounded memory; HBM-infeasible cells pruned)")
     ap.add_argument("--model", default=None,
                     help="cost-model registry device name (default: the "
                          "analytic tpu-v5e seed); see python -m "
@@ -162,7 +178,8 @@ def main() -> None:
     ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
                     model=args.model, top_k=args.top,
                     n_devices=args.devices,
-                    tune_kernels=args.tune_kernels)
+                    tune_kernels=args.tune_kernels,
+                    stream_chunk_cells=args.stream_chunk)
     # None resolves to the built-in analytic seed, which an explicit
     # "--model tpu-v5e" does NOT (a fitted registry file would shadow it)
     model_label = args.model or "tpu-v5e analytic seed"
@@ -180,6 +197,11 @@ def main() -> None:
         if args.tune_kernels:
             for kern, blocks in entry[3].items():
                 print(f"{'':14}· {kern}: {blocks}")
+    # persistent fused-program cache telemetry: a repeat invocation of the
+    # same search reports "warm" (all programs loaded, zero compiles) —
+    # CI's compile-cache smoke step asserts exactly that
+    from repro.core import exprops
+    print(exprops.disk_cache_report())
 
 
 if __name__ == "__main__":

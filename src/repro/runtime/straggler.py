@@ -21,6 +21,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import exprops
+
+#: incremental-rescore cache for monitor re-anchoring (see ``from_model``)
+_BASIS_CACHE = exprops.BasisCache(maxsize=2048)
+
 
 @dataclass
 class StragglerEvent:
@@ -58,9 +63,13 @@ class StragglerMonitor:
         same batched engine as plan search (``predictor.predict_plans`` →
         ``core.planspace``) rather than the heavier ``predict_step``
         (which also assembles the per-property breakdown and MFU).
+        Scoring passes the module's ``exprops.BasisCache``, so re-anchoring
+        a monitor after a mesh/shape delta (e.g. post-``elastic.replan``)
+        recomputes only the basis columns the delta touches.
         """
         from repro.core import predictor  # runtime sits above core
-        secs = predictor.predict_plans(cfg, shape, [plan], mesh_shape, model)
+        secs = predictor.predict_plans(cfg, shape, [plan], mesh_shape,
+                                       model, cache=_BASIS_CACHE)
         return cls(n_hosts=n_hosts, predicted_step_s=float(secs[0]), **kw)
 
     def threshold(self) -> float:

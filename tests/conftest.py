@@ -1,0 +1,24 @@
+"""Suite-wide fixtures.
+
+The fused-program disk cache (``core.exprops``) defaults to
+``~/.cache/repro/exprops``; tests must neither litter the user's real
+cache nor read stale programs from it (which would couple test outcomes
+to machine state), so the whole session is pointed at a throwaway
+directory.  Individual tests that probe the cache behavior override the
+variable themselves via ``monkeypatch``.
+"""
+import os
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_compile_cache(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("exprops-cache"))
+    old = os.environ.get("REPRO_COMPILE_CACHE")
+    os.environ["REPRO_COMPILE_CACHE"] = d
+    yield
+    if old is None:
+        os.environ.pop("REPRO_COMPILE_CACHE", None)
+    else:
+        os.environ["REPRO_COMPILE_CACHE"] = old

@@ -137,8 +137,11 @@ def test_from_cells_matches_from_product(sweep_cell):
     np.testing.assert_array_equal(prod_space.dp, cell_space.dp)
     np.testing.assert_array_equal(prod_space.tp, cell_space.tp)
     np.testing.assert_array_equal(prod_space.n_dev, cell_space.n_dev)
+    # product spaces score through the rank-1 profile fast path, cell
+    # spaces through the generic unique-row path: same math, so only
+    # rounding-order noise apart
     np.testing.assert_allclose(prod_space.scores(None),
-                               cell_space.scores(None), rtol=0)
+                               cell_space.scores(None), rtol=1e-12)
 
 
 def test_subset_preserves_cells(sweep_cell):
@@ -149,7 +152,9 @@ def test_subset_preserves_cells(sweep_cell):
     mask[::7] = True
     sub = space.subset(mask)
     assert len(sub) == int(mask.sum())
-    np.testing.assert_allclose(sub.scores(None), secs[mask], rtol=0)
+    # subsetting drops the product structure, so the subset rescores
+    # through the generic path: rounding-order noise only
+    np.testing.assert_allclose(sub.scores(None), secs[mask], rtol=1e-12)
     # the precomputed evaluation groups are remapped, not recomputed
     assert sub.remat_groups is not None and sub.topo_groups is not None
     assert sum(len(g) for g in sub.remat_groups.values()) == len(sub)
@@ -172,7 +177,7 @@ def test_subset_with_reordering_indices(sweep_cell):
     secs = space.scores(None)
     order = np.argsort(space.peak_bytes(), kind="stable")[:37][::-1]
     sub = space.subset(order)
-    np.testing.assert_allclose(sub.scores(None), secs[order], rtol=0)
+    np.testing.assert_allclose(sub.scores(None), secs[order], rtol=1e-12)
     assert [id(p) for p in sub.plans] == [id(space.plans[i]) for i in order]
 
 
