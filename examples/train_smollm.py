@@ -38,6 +38,12 @@ def main():
                     help="keep existing checkpoints (kill-and-resume demo)")
     ap.add_argument("--full", action="store_true",
                     help="train the full 360M config (TPU-scale)")
+    ap.add_argument("--online-calibrate", action="store_true",
+                    help="stream step timings into the online calibrator "
+                         "(RLS refit + drift watch)")
+    ap.add_argument("--telemetry-json", default=None,
+                    help="write the telemetry ring buffer to this JSON "
+                         "file at exit (requires --online-calibrate)")
     args = ap.parse_args()
 
     cfg = get_arch("smollm-360m") if args.full else hundred_m_config()
@@ -49,7 +55,9 @@ def main():
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                     global_batch=args.batch, seed=11)
     tc = TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=100, log_every=20,
-                       lr=1e-3, warmup=30, total_steps=args.steps)
+                       lr=1e-3, warmup=30, total_steps=args.steps,
+                       online_calibrate=args.online_calibrate,
+                       calib_device=f"{cfg.name}-online")
     trainer = Trainer(cfg, dc, tc)
     start = trainer.step
     hist = trainer.train(args.steps - start)
@@ -59,6 +67,14 @@ def main():
           f"loss {first['loss']:.4f} -> {last['loss']:.4f}")
     assert last["loss"] < first["loss"], "loss must decrease"
     print(f"[example] checkpoints in {args.ckpt}: resume with --resume")
+
+    if trainer.calibrator is not None:
+        print("[calib] refit report:")
+        print(trainer.calibrator.final_report())
+        if args.telemetry_json:
+            trainer.calibrator.sink.save(args.telemetry_json)
+            print(f"[calib] telemetry saved to {args.telemetry_json} "
+                  f"({len(trainer.calibrator.sink)} samples buffered)")
 
 
 if __name__ == "__main__":

@@ -11,16 +11,28 @@ Public surface:
   * ``resolve_model(x)`` — normalize ``None | name | LinearCostModel``
     (the autoshard / straggler / elastic layers apply the same rules via
     ``core.predictor.resolve_model``, which delegates names to this
-    registry).
+    registry);
+  * the **online** path — ``TelemetrySink`` (``telemetry.py``) buffering
+    live (property vector, seconds) samples, ``OnlineCalibrator`` /
+    ``DriftMonitor`` (``online.py``) tracking the fit with streaming RLS,
+    flagging drift, and re-registering refit models with
+    ``register_revision``.
 """
 from repro.calibration.calibrate import CalibrationResult, calibrate
+from repro.calibration.online import (DriftEvent, DriftMonitor,
+                                      OnlineCalibrator)
 from repro.calibration.registry import (UnknownDeviceError,
                                         default_registry_dir, list_models,
-                                        load_model, resolve_model, save_model)
+                                        load_model, register_revision,
+                                        resolve_model, save_model)
 from repro.calibration.seeds import ANALYTIC_SEEDS, Datasheet, analytic_model
+from repro.calibration.telemetry import (TelemetrySample, TelemetrySink,
+                                         pv_fingerprint)
 
 __all__ = [
-    "ANALYTIC_SEEDS", "CalibrationResult", "Datasheet", "UnknownDeviceError",
-    "analytic_model", "calibrate", "default_registry_dir", "list_models",
-    "load_model", "resolve_model", "save_model",
+    "ANALYTIC_SEEDS", "CalibrationResult", "Datasheet", "DriftEvent",
+    "DriftMonitor", "OnlineCalibrator", "TelemetrySample", "TelemetrySink",
+    "UnknownDeviceError", "analytic_model", "calibrate",
+    "default_registry_dir", "list_models", "load_model", "pv_fingerprint",
+    "register_revision", "resolve_model", "save_model",
 ]

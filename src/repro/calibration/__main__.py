@@ -19,6 +19,7 @@ import sys
 
 from repro.calibration import registry
 from repro.calibration.calibrate import calibrate
+from repro.core.model import ModelSchemaError
 
 
 def main(argv=None) -> int:
@@ -62,8 +63,10 @@ def main(argv=None) -> int:
     if args.show:
         try:
             model = registry.load_model(args.show, args.out)
-        except registry.UnknownDeviceError as e:
-            print(e, file=sys.stderr)
+        except (registry.UnknownDeviceError, ModelSchemaError) as e:
+            # unknown device OR a registry file with a mismatched/unreadable
+            # SCHEMA_VERSION: report clearly, don't traceback
+            print(f"cannot load model {args.show!r}: {e}", file=sys.stderr)
             return 1
         print(model.interpretation_report())
         return 0

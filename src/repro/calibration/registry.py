@@ -17,7 +17,7 @@ from __future__ import annotations
 import json
 import os
 import re
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.calibration import seeds
 from repro.core.model import LinearCostModel, ModelSchemaError
@@ -65,6 +65,33 @@ def save_model(model: LinearCostModel, registry_dir: Optional[str] = None,
     path = _model_path(registry_dir, name or model.device)
     model.save(path)
     return path
+
+
+def register_revision(model: LinearCostModel,
+                      registry_dir: Optional[str] = None,
+                      name: Optional[str] = None) -> Tuple[str, int]:
+    """Register ``model`` as the next revision of ``name``'s entry.
+
+    The online-calibration path (``calibration/online.py``) calls this on
+    every drift refit: the existing registry file's ``meta["revision"]``
+    (0 when absent or unreadable) is bumped by one, stamped into the model,
+    and the file is rewritten.  The rewrite rolls the file mtime, so every
+    consumer memoizing per-device conclusions on ``fingerprint(device)``
+    (e.g. the kernel autotuner's block-choice memo) misses and re-derives
+    against the refit weights.  Returns (path, new revision)."""
+    registry_dir = registry_dir or default_registry_dir()
+    name = name or model.device
+    path = _model_path(registry_dir, name)
+    prev = 0
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = int(LinearCostModel.from_json_dict(
+                    json.load(f)).meta.get("revision", 0))
+        except (OSError, ValueError, KeyError, TypeError):
+            prev = 0
+    model.meta["revision"] = prev + 1
+    return save_model(model, registry_dir, name=name), prev + 1
 
 
 #: analytic seeds are pure functions of the datasheet constants, so one

@@ -1,0 +1,163 @@
+"""Streaming telemetry — the live-samples side of online calibration.
+
+The trainer (``runtime/trainer.py``, its ``time.perf_counter`` step loop)
+and the decode server (``runtime/server.py``) feed a ``TelemetrySink``
+with (property-vector, measured seconds) samples as real steps execute.
+The sink is a bounded ring buffer with the property vectors stored ONCE
+per distinct fingerprint — a training run emits thousands of samples that
+all share one step vector, so samples are (fingerprint, seconds, step)
+records over a small deduplicated vector table.
+
+Consumers: ``calibration/online.py`` (RLS refit windows, drift residuals)
+and the telemetry JSON artifact the CI online-calibration step uploads.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Mapping, Optional, Tuple
+
+
+def pv_fingerprint(pv: Mapping[str, float]) -> str:
+    """Stable content hash of a property vector (zero entries ignored, so
+    a finalized and a sparse form of the same vector agree)."""
+    h = hashlib.blake2b(digest_size=12)
+    for k in sorted(pv):
+        v = float(pv[k])
+        if v:
+            h.update(f"{k}={v!r};".encode())
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class TelemetrySample:
+    seq: int                 # global monotone sample index (never reused)
+    fingerprint: str         # key into the sink's vector table
+    seconds: float           # measured wall seconds
+    step: Optional[int]      # producer's step counter, if any
+    tag: str                 # e.g. "train" | "decode" | "prefill"
+
+
+class TelemetrySink:
+    """Bounded ring buffer of timing samples + deduplicated vector table.
+
+    ``record`` assigns each sample a monotone ``seq``; eviction drops the
+    oldest sample and garbage-collects its property vector when no buffered
+    sample references it anymore.  Non-positive timings are counted and
+    dropped — they carry no fit information and would poison the
+    relative-error system downstream.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive: {capacity}")
+        self.capacity = capacity
+        self._buf: Deque[TelemetrySample] = deque()
+        self._pvs: Dict[str, Dict[str, float]] = {}
+        self._refs: Dict[str, int] = {}
+        self.n_recorded = 0      # accepted samples, including evicted ones
+        self.n_dropped = 0       # rejected non-positive timings
+
+    # ------------------------------------------------------------------
+    def record(self, pv: Mapping[str, float], seconds: float, *,
+               step: Optional[int] = None, tag: str = "") -> Optional[int]:
+        """Append one sample; returns its ``seq`` (None when dropped)."""
+        if not seconds > 0:
+            self.n_dropped += 1
+            return None
+        fp = pv_fingerprint(pv)
+        if fp not in self._pvs:
+            self._pvs[fp] = {k: float(v) for k, v in pv.items() if v}
+            self._refs[fp] = 0
+        self._refs[fp] += 1
+        seq = self.n_recorded
+        self._buf.append(TelemetrySample(seq, fp, float(seconds), step, tag))
+        self.n_recorded += 1
+        while len(self._buf) > self.capacity:
+            old = self._buf.popleft()
+            self._refs[old.fingerprint] -= 1
+            if self._refs[old.fingerprint] == 0:
+                del self._refs[old.fingerprint]
+                del self._pvs[old.fingerprint]
+        return seq
+
+    def pv(self, fingerprint: str) -> Dict[str, float]:
+        return self._pvs[fingerprint]
+
+    # ------------------------------------------------------------------
+    def samples(self, *, n: Optional[int] = None,
+                since_seq: Optional[int] = None,
+                tag: Optional[str] = None) -> List[TelemetrySample]:
+        """Buffered samples, oldest first, filtered by window/tag."""
+        out = [s for s in self._buf
+               if (since_seq is None or s.seq >= since_seq)
+               and (tag is None or s.tag == tag)]
+        if n is not None:
+            out = out[-n:]
+        return out
+
+    def window(self, *, n: Optional[int] = None,
+               since_seq: Optional[int] = None, tag: Optional[str] = None
+               ) -> Tuple[List[Dict[str, float]], List[float]]:
+        """(property vectors, times) for a sample window — the exact
+        argument pair ``fit_relative`` / ``RLSState.observe_many`` take."""
+        sel = self.samples(n=n, since_seq=since_seq, tag=tag)
+        return [self._pvs[s.fingerprint] for s in sel], \
+               [s.seconds for s in sel]
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def stats(self) -> Dict[str, int]:
+        return {"n_recorded": self.n_recorded, "n_buffered": len(self._buf),
+                "n_dropped": self.n_dropped, "n_unique_pvs": len(self._pvs)}
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self._pvs.clear()
+        self._refs.clear()
+
+    # ------------------------------------------------------------------
+    def to_json_dict(self) -> Dict[str, object]:
+        return {
+            "schema": 1,
+            "kind": "telemetry",
+            "capacity": self.capacity,
+            "n_recorded": self.n_recorded,
+            "n_dropped": self.n_dropped,
+            "pvs": self._pvs,
+            "samples": [[s.seq, s.fingerprint, s.seconds, s.step, s.tag]
+                        for s in self._buf],
+        }
+
+    def save(self, path: str) -> None:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json_dict(), f, indent=1)
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping[str, object]) -> "TelemetrySink":
+        if d.get("kind") != "telemetry":
+            raise ValueError(f"not a telemetry record: {d.get('kind')!r}")
+        sink = cls(capacity=int(d["capacity"]))
+        sink.n_dropped = int(d.get("n_dropped", 0))
+        for fp, pv in dict(d["pvs"]).items():
+            sink._pvs[fp] = {k: float(v) for k, v in pv.items()}
+            sink._refs[fp] = 0
+        for seq, fp, seconds, step, tag in d["samples"]:
+            sink._buf.append(TelemetrySample(int(seq), fp, float(seconds),
+                                             None if step is None
+                                             else int(step), tag))
+            sink._refs[fp] += 1
+        sink.n_recorded = int(d["n_recorded"])
+        return sink
+
+    @classmethod
+    def load(cls, path: str) -> "TelemetrySink":
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))

@@ -622,10 +622,24 @@ class BasisCache:
         self._lru: LRUCache = LRUCache(maxsize=maxsize)
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._lru)}
+                "entries": len(self._lru),
+                "invalidations": self.invalidations}
+
+    def clear(self) -> None:
+        """Drop every cached column (hit/miss telemetry survives).
+
+        The online-calibration path calls this on a drift refit: basis
+        columns themselves are weight-independent, but a monitor that
+        cached columns for a now-diverged regime must re-derive against
+        whatever the refit environment produces — and an explicit epoch
+        here keeps 'no stale entries after refit' a checkable invariant
+        rather than an argument about key structure."""
+        self._lru = LRUCache(maxsize=self._lru.maxsize)
+        self.invalidations += 1
 
 
 def _fingerprint(var_names: Tuple[str, ...], scalars: tuple,

@@ -232,8 +232,15 @@ def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
 def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
                  mesh_shape: Mapping[str, int],
                  weights: ModelLike = None,
-                 ) -> StepPrediction:
-    """Predict one step's wall time on ``mesh_shape`` under ``plan``."""
+                 residual=None) -> StepPrediction:
+    """Predict one step's wall time on ``mesh_shape`` under ``plan``.
+
+    ``residual`` (a ``core.fit.ResidualHead``, e.g. from an
+    ``OnlineCalibrator`` running with ``residual=True``) applies the
+    learned multiplicative correction on top of the analytic inner product
+    — the hybrid analytic+learned prediction.  The per-property breakdown
+    stays analytic; the head's contribution appears as a ``residual``
+    term and scales ``seconds``/``mfu``."""
     weights = resolve_model(weights)
     n_dev = int(np.prod(list(mesh_shape.values()))) or 1
     env = _env_for(shape, plan.microbatches)
@@ -254,6 +261,10 @@ def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
             terms["collective"] += v
         else:
             terms["other"] += v
+    if residual is not None:
+        corrected = total * residual.correction(pv)
+        terms["residual"] = corrected - total
+        total = corrected
     mf = sc.concrete_model_flops(env)
     mfu = mf / (n_dev * PEAK_FLOPS_BF16 * total) if total > 0 else 0.0
     return StepPrediction(seconds=total, breakdown=bd, terms=terms,

@@ -175,6 +175,20 @@ def main() -> None:
                          "repro.calibration --list")
     args = ap.parse_args()
 
+    # model provenance: which weights are scoring this sweep (source /
+    # revision matter once online refits start bumping registry files)
+    resolved = predictor.resolve_model(args.model)
+    meta = resolved.meta
+    prov = [f"device={resolved.device}",
+            f"source={meta.get('source', 'analytic-seed')}"]
+    if "revision" in meta:
+        prov.append(f"revision={meta['revision']}")
+    if "fit_geomean_rel_err" in meta:
+        prov.append(f"fit_rel_err={meta['fit_geomean_rel_err']:.3f}")
+    if "refit_epoch" in meta:
+        prov.append(f"refit_epoch={meta['refit_epoch']}")
+    print(f"[autoshard] cost model: {' '.join(prov)}")
+
     ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
                     model=args.model, top_k=args.top,
                     n_devices=args.devices,

@@ -35,6 +35,15 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--online-calibrate", action="store_true",
+                    help="stream per-step timings into the online "
+                         "calibrator (RLS refit + drift watch)")
+    ap.add_argument("--calib-device", default=None,
+                    help="registry device name for online refits "
+                         "(default: '<arch>-online')")
+    ap.add_argument("--calib-auto-register", action="store_true",
+                    help="write drift-refit models into the registry "
+                         "(bumps the model file revision)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -44,7 +53,10 @@ def main() -> None:
                     global_batch=args.batch, seed=args.seed,
                     n_codebooks=cfg.n_input_codebooks)
     tc = TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
-                       lr=args.lr, total_steps=args.steps, seed=args.seed)
+                       lr=args.lr, total_steps=args.steps, seed=args.seed,
+                       online_calibrate=args.online_calibrate,
+                       calib_device=args.calib_device,
+                       calib_auto_register=args.calib_auto_register)
 
     # cost-model prediction for the straggler monitor threshold
     shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.seq,
@@ -58,6 +70,9 @@ def main() -> None:
     trainer = Trainer(cfg, dc, tc)
     hist = trainer.train(args.steps)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    if trainer.calibrator is not None:
+        print("[calib] refit report:")
+        print(trainer.calibrator.final_report())
 
 
 if __name__ == "__main__":

@@ -32,7 +32,8 @@ class Request:
 
 class DecodeServer:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 max_len: int = 512, eos_id: int = 0, seed: int = 0):
+                 max_len: int = 512, eos_id: int = 0, seed: int = 0,
+                 calibrator=None):
         assert cfg.n_input_codebooks == 1, "codebook serving via examples/"
         self.cfg = cfg
         self.params = params
@@ -47,6 +48,18 @@ class DecodeServer:
 
         self._decode = jax.jit(
             lambda p, s, t: transformer.decode_step(p, cfg, s, t))
+
+        # ---- online calibration: feed per-iteration decode timings ----
+        self.calibrator = calibrator
+        self._decode_pv = None
+        if calibrator is not None:
+            from repro.configs.base import ShapeConfig
+            from repro.core import predictor
+            from repro.distributed.plan import Plan
+            live = ShapeConfig("decode_live", max_len, slots, "decode")
+            self._decode_pv = predictor.plan_property_vector(
+                cfg, live, Plan(dp_axes=(), tp_axis=None, fsdp=False,
+                                sequence_parallel=False), {"data": 1})
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -77,8 +90,13 @@ class DecodeServer:
         for s, req in enumerate(self.active):
             if req is not None:
                 tok[s, 0] = req.out[-1] if req.out else req.prompt[-1]
+        t0 = time.perf_counter()
         logits, self.state = self._decode(self.params, self.state,
                                           jnp.asarray(tok))
+        if self.calibrator is not None:
+            jax.block_until_ready(logits)
+            self.calibrator.observe(self._decode_pv,
+                                    time.perf_counter() - t0, tag="decode")
         self.rng, sub = jax.random.split(self.rng)
         nxt = np.asarray(jax.random.categorical(
             sub, jnp.asarray(logits[:, -1], jnp.float32), axis=-1))

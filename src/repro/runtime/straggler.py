@@ -76,6 +76,15 @@ class StragglerMonitor:
         return self.k * max(self.predicted_step_s,
                             float(np.median(self._state)))
 
+    def reanchor(self, predicted_step_s: float) -> None:
+        """Move the threshold anchor to a new predicted step time.
+
+        Called after an online-calibration refit (``calibration/online.py``)
+        so the straggler threshold tracks the refit model instead of the
+        diverged one; the per-host EWMA state is kept — observed behavior
+        didn't change, the model of it did."""
+        self.predicted_step_s = float(predicted_step_s)
+
     def observe(self, step: int, host_times_s) -> List[StragglerEvent]:
         """Feed one step's per-host times; returns new straggler events."""
         t = np.asarray(host_times_s, dtype=np.float64)

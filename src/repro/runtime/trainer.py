@@ -5,6 +5,14 @@ straggler monitor, with resume-from-latest on construction, so a restart
 after preemption (or an elastic re-plan) continues exactly where the dead
 run stopped: the data pipeline is addressed by the checkpointed step and
 the RNG by a (seed, step) fold — no iterator state to recover.
+
+With ``online_calibrate`` the per-step ``time.perf_counter`` timings also
+feed an ``OnlineCalibrator`` (``calibration/online.py``): each step
+records (the step's property vector, measured seconds) into the telemetry
+sink, the streaming RLS tracks the fit, and a drift event triggers a
+refit + straggler-threshold re-anchor.  A ``[calib]`` report line (sample
+counts, windowed relative error, drift status, refit epochs) prints every
+``log_every`` steps.
 """
 from __future__ import annotations
 
@@ -17,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import store
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, ShapeConfig
 from repro.data.pipeline import DataConfig, PackedLoader
 from repro.distributed.plan import Plan
 from repro.models import transformer
@@ -38,19 +46,26 @@ class TrainerConfig:
     total_steps: int = 1000
     async_ckpt: bool = True
     save_on_exit: bool = True  # False simulates preemption mid-interval
+    # --- online calibration (calibration/online.py) ---
+    online_calibrate: bool = False
+    calib_device: Optional[str] = None      # registry name for refit models
+    calib_registry: Optional[str] = None    # registry dir override
+    calib_auto_register: bool = False       # write refits into the registry
 
 
 class Trainer:
     def __init__(self, cfg: ArchConfig, data_cfg: DataConfig,
                  tc: TrainerConfig, plan: Optional[Plan] = None,
-                 predicted_step_s: Optional[float] = None):
+                 predicted_step_s: Optional[float] = None,
+                 calibrator=None):
         self.cfg = cfg
         self.tc = tc
         self.loader = PackedLoader(data_cfg)
         self.optimizer = opt.get_optimizer(cfg.optimizer)
         lr = opt.warmup_cosine(tc.lr, tc.warmup, tc.total_steps)
+        plan = plan or Plan(dp_axes=())
         self.step_fn = jax.jit(steps.make_train_step(
-            cfg, self.optimizer, plan or Plan(dp_axes=()), lr_schedule=lr))
+            cfg, self.optimizer, plan, lr_schedule=lr))
         self.state = steps.init_train_state(
             cfg, jax.random.PRNGKey(tc.seed), self.optimizer)
         self.monitor = StragglerMonitor(
@@ -58,6 +73,25 @@ class Trainer:
         self.ckpt = (store.AsyncCheckpointer(tc.ckpt_dir, tc.keep_ckpts)
                      if tc.ckpt_dir and tc.async_ckpt else None)
         self.history: List[Dict[str, float]] = []
+
+        # ---- online calibration ----
+        self.calibrator = calibrator
+        if self.calibrator is None and tc.online_calibrate:
+            from repro.calibration.online import OnlineCalibrator
+            self.calibrator = OnlineCalibrator(
+                None, device=tc.calib_device or f"{cfg.name}-online",
+                registry_dir=tc.calib_registry,
+                auto_register=tc.calib_auto_register)
+        self._step_pv = None
+        if self.calibrator is not None:
+            # the live step's property vector: this trainer runs the whole
+            # batch on the local substrate, so the pv is the single-device
+            # cell of (cfg × the ACTUAL data shape × the jitted plan)
+            from repro.core import predictor
+            live = ShapeConfig("train_live", data_cfg.seq_len,
+                               data_cfg.global_batch, "train")
+            self._step_pv = predictor.plan_property_vector(
+                cfg, live, plan, {"data": 1})
 
         # ---- resume ----
         if tc.ckpt_dir:
@@ -95,6 +129,19 @@ class Trainer:
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self.monitor.observe(step, [dt])
+            if self.calibrator is not None:
+                ev = self.calibrator.observe(self._step_pv, dt, step=step,
+                                             tag="train")
+                if ev is not None:
+                    # refit already happened inside observe(); re-anchor the
+                    # straggler threshold to the refit model's prediction
+                    self.monitor.reanchor(
+                        self.calibrator.model.predict(self._step_pv))
+                    print(f"[calib] drift detected at step {step} "
+                          f"(direction={ev.direction}, onset seq "
+                          f"{ev.onset_seq}): refit epoch "
+                          f"{self.calibrator.refits}, revision "
+                          f"{self.calibrator.revision}")
 
             m = {"step": step, "loss": float(metrics["loss"]),
                  "grad_norm": float(metrics["grad_norm"]),
@@ -105,6 +152,9 @@ class Trainer:
             elif step % self.tc.log_every == 0:
                 print(f"[trainer] step {step:5d} loss {m['loss']:.4f} "
                       f"gnorm {m['grad_norm']:.3f} {dt*1e3:.0f}ms")
+            if self.calibrator is not None \
+                    and step % self.tc.log_every == 0:
+                print(f"[calib] {self.calibrator.report_line()}")
             if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
                 self._save()
         if self.tc.ckpt_dir and self.tc.save_on_exit:
