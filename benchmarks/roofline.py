@@ -30,7 +30,7 @@ OUT_DIR = "experiments"
 def model_flops(arch: str, shape_name: str) -> float:
     cfg = ARCHS[arch]
     shape = SHAPES[shape_name]
-    sc = archcount.counts_for(cfg, shape.kind)
+    sc = archcount.counts_for(cfg, shape)
     return sc.concrete_model_flops(
         {"B": shape.global_batch, "S": shape.seq_len})
 

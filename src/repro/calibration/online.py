@@ -43,6 +43,7 @@ class DriftEvent:
     onset_seq: int            # CUSUM excursion start — change-point estimate
     magnitude: float          # EWMA of the normalized residual at detection
     direction: str            # "slow" (device slower than model) | "fast"
+    phase: str = "train"      # workload phase of the tipping sample
 
 
 @dataclass
@@ -72,7 +73,8 @@ class DriftMonitor:
     events: List[DriftEvent] = field(default_factory=list)
 
     def observe(self, seq: int, residual: float,
-                step: Optional[int] = None) -> Optional[DriftEvent]:
+                step: Optional[int] = None,
+                phase: str = "train") -> Optional[DriftEvent]:
         """Feed one normalized residual; returns a new event on alarm."""
         self.n += 1
         self.mean = (1 - self.ewma) * self.mean + self.ewma * residual
@@ -97,7 +99,8 @@ class DriftMonitor:
             ev = DriftEvent(seq=seq, step=step,
                             onset_seq=seq if onset is None else onset,
                             magnitude=self.mean,
-                            direction="slow" if slow else "fast")
+                            direction="slow" if slow else "fast",
+                            phase=phase)
             self.events.append(ev)
             self.reset()
             return ev
@@ -128,6 +131,15 @@ class OnlineCalibrator:
     accumulate drift evidence.  ``caches`` are ``exprops.BasisCache``
     instances to clear on refit; ``auto_register`` writes each refit model
     into the registry under ``device`` with a bumped revision.
+
+    ``phase`` scopes the calibrator to one workload phase ("train" |
+    "prefill" | "decode"): samples from other phases still land in the
+    telemetry sink (phase-tagged), but never reach the RLS tracker or the
+    drift CUSUM — one linear model fits one phase's regime, and a prefill
+    burst must not read as train-time drift.  ``phase=None`` (default)
+    accepts every sample, preserving the single-stream behavior for
+    producers that feed one phase only; refit windows are ALWAYS filtered
+    to the drift event's own phase.
     """
 
     def __init__(self, model=None, *, device: Optional[str] = None,
@@ -137,7 +149,8 @@ class OnlineCalibrator:
                  forgetting: float = 0.995, delta: float = 1e12,
                  warmup: int = 16, auto_register: bool = False,
                  caches: Sequence = (), residual: bool = False,
-                 min_refit_samples: int = 2):
+                 min_refit_samples: int = 2,
+                 phase: Optional[str] = None):
         self.model = registry.resolve_model(model, registry_dir=registry_dir)
         self.device = device or self.model.device
         self.registry_dir = registry_dir
@@ -150,6 +163,7 @@ class OnlineCalibrator:
         self.caches = list(caches)
         self.fit_residual_head = residual
         self.min_refit_samples = min_refit_samples
+        self.phase = phase
         self.rls = fit.RLSState.from_model(self.model, lam=forgetting,
                                            delta=delta)
         self.residual_head: Optional[fit.ResidualHead] = None
@@ -160,18 +174,24 @@ class OnlineCalibrator:
 
     # ------------------------------------------------------------------
     def observe(self, pv: Mapping[str, float], seconds: float, *,
-                step: Optional[int] = None,
-                tag: str = "") -> Optional[DriftEvent]:
+                step: Optional[int] = None, tag: str = "",
+                phase: str = "train") -> Optional[DriftEvent]:
         """Ingest one live timing sample; returns a drift event if this
-        sample tipped the CUSUM (the refit has already happened by then)."""
-        seq = self.sink.record(pv, seconds, step=step, tag=tag)
+        sample tipped the CUSUM (the refit has already happened by then).
+        Samples whose ``phase`` does not match a phase-scoped calibrator
+        are buffered (tagged) but excluded from the fit and the drift
+        watch."""
+        seq = self.sink.record(pv, seconds, step=step, tag=tag, phase=phase)
         if seq is None:          # non-positive timing: no fit information
             return None
+        if self.phase is not None and phase != self.phase:
+            return None          # out-of-scope phase: telemetry only
         pred = self.rls.predict(pv)
         self.rls.observe(pv, seconds)
         if self.sink.n_recorded <= self.warmup or pred <= 0:
             return None
-        ev = self.drift.observe(seq, (seconds - pred) / pred, step=step)
+        ev = self.drift.observe(seq, (seconds - pred) / pred, step=step,
+                                phase=phase)
         if ev is not None:
             self.events.append(ev)
             self._refit(ev)
@@ -185,10 +205,13 @@ class OnlineCalibrator:
         pre-drift regime does not dilute the new fit.  Warm-starting from
         the outgoing model keeps directions the window never exercises
         anchored instead of collapsing them to zero (the window from a
-        single workload is rank-1)."""
-        pvs, times = self.sink.window(since_seq=ev.onset_seq)
+        single workload is rank-1).  Windows filter to the event's own
+        phase: a decode-drift refit must never absorb train rows."""
+        pvs, times = self.sink.window(since_seq=ev.onset_seq,
+                                      phase=ev.phase)
         if len(times) < self.min_refit_samples:
-            pvs, times = self.sink.window(n=self.min_refit_samples)
+            pvs, times = self.sink.window(n=self.min_refit_samples,
+                                          phase=ev.phase)
         state = fit.RLSState.from_model(self.model, lam=1.0,
                                         delta=self.delta)
         state.observe_many(pvs, times)
@@ -252,6 +275,7 @@ class OnlineCalibrator:
                          f"ridge={self.residual_head.meta.get('ridge')}")
         for ev in self.events:
             lines.append(f"drift event: seq={ev.seq} step={ev.step} "
-                         f"onset={ev.onset_seq} direction={ev.direction} "
+                         f"onset={ev.onset_seq} phase={ev.phase} "
+                         f"direction={ev.direction} "
                          f"magnitude={ev.magnitude:+.3f}")
         return "\n".join(lines)

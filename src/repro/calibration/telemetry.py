@@ -21,10 +21,15 @@ from dataclasses import dataclass
 from typing import Deque, Dict, List, Mapping, Optional, Tuple
 
 
-def pv_fingerprint(pv: Mapping[str, float]) -> str:
+def pv_fingerprint(pv: Mapping[str, float], phase: str = "") -> str:
     """Stable content hash of a property vector (zero entries ignored, so
-    a finalized and a sparse form of the same vector agree)."""
+    a finalized and a sparse form of the same vector agree).  A truthy
+    ``phase`` is hashed in: a train step and a decode iteration whose
+    vectors happen to collide numerically must still never share a table
+    entry, because refit windows select by phase."""
     h = hashlib.blake2b(digest_size=12)
+    if phase:
+        h.update(f"phase={phase};".encode())
     for k in sorted(pv):
         v = float(pv[k])
         if v:
@@ -38,7 +43,8 @@ class TelemetrySample:
     fingerprint: str         # key into the sink's vector table
     seconds: float           # measured wall seconds
     step: Optional[int]      # producer's step counter, if any
-    tag: str                 # e.g. "train" | "decode" | "prefill"
+    tag: str                 # producer label, free-form
+    phase: str = "train"     # workload phase: "train" | "prefill" | "decode"
 
 
 class TelemetrySink:
@@ -63,18 +69,23 @@ class TelemetrySink:
 
     # ------------------------------------------------------------------
     def record(self, pv: Mapping[str, float], seconds: float, *,
-               step: Optional[int] = None, tag: str = "") -> Optional[int]:
-        """Append one sample; returns its ``seq`` (None when dropped)."""
+               step: Optional[int] = None, tag: str = "",
+               phase: str = "train") -> Optional[int]:
+        """Append one sample; returns its ``seq`` (None when dropped).
+        ``phase`` keys the sample (and its vector-table entry) by workload
+        phase, so refit windows never mix prefill/decode rows into a train
+        fit."""
         if not seconds > 0:
             self.n_dropped += 1
             return None
-        fp = pv_fingerprint(pv)
+        fp = pv_fingerprint(pv, phase)
         if fp not in self._pvs:
             self._pvs[fp] = {k: float(v) for k, v in pv.items() if v}
             self._refs[fp] = 0
         self._refs[fp] += 1
         seq = self.n_recorded
-        self._buf.append(TelemetrySample(seq, fp, float(seconds), step, tag))
+        self._buf.append(TelemetrySample(seq, fp, float(seconds), step, tag,
+                                         phase))
         self.n_recorded += 1
         while len(self._buf) > self.capacity:
             old = self._buf.popleft()
@@ -90,21 +101,25 @@ class TelemetrySink:
     # ------------------------------------------------------------------
     def samples(self, *, n: Optional[int] = None,
                 since_seq: Optional[int] = None,
-                tag: Optional[str] = None) -> List[TelemetrySample]:
-        """Buffered samples, oldest first, filtered by window/tag."""
+                tag: Optional[str] = None,
+                phase: Optional[str] = None) -> List[TelemetrySample]:
+        """Buffered samples, oldest first, filtered by window/tag/phase
+        (None = no filtering on that key)."""
         out = [s for s in self._buf
                if (since_seq is None or s.seq >= since_seq)
-               and (tag is None or s.tag == tag)]
+               and (tag is None or s.tag == tag)
+               and (phase is None or s.phase == phase)]
         if n is not None:
             out = out[-n:]
         return out
 
     def window(self, *, n: Optional[int] = None,
-               since_seq: Optional[int] = None, tag: Optional[str] = None
+               since_seq: Optional[int] = None, tag: Optional[str] = None,
+               phase: Optional[str] = None
                ) -> Tuple[List[Dict[str, float]], List[float]]:
         """(property vectors, times) for a sample window — the exact
         argument pair ``fit_relative`` / ``RLSState.observe_many`` take."""
-        sel = self.samples(n=n, since_seq=since_seq, tag=tag)
+        sel = self.samples(n=n, since_seq=since_seq, tag=tag, phase=phase)
         return [self._pvs[s.fingerprint] for s in sel], \
                [s.seconds for s in sel]
 
@@ -123,13 +138,14 @@ class TelemetrySink:
     # ------------------------------------------------------------------
     def to_json_dict(self) -> Dict[str, object]:
         return {
-            "schema": 1,
+            "schema": 2,          # 2 adds the per-sample phase column
             "kind": "telemetry",
             "capacity": self.capacity,
             "n_recorded": self.n_recorded,
             "n_dropped": self.n_dropped,
             "pvs": self._pvs,
-            "samples": [[s.seq, s.fingerprint, s.seconds, s.step, s.tag]
+            "samples": [[s.seq, s.fingerprint, s.seconds, s.step, s.tag,
+                         s.phase]
                         for s in self._buf],
         }
 
@@ -149,10 +165,14 @@ class TelemetrySink:
         for fp, pv in dict(d["pvs"]).items():
             sink._pvs[fp] = {k: float(v) for k, v in pv.items()}
             sink._refs[fp] = 0
-        for seq, fp, seconds, step, tag in d["samples"]:
+        for row in d["samples"]:
+            # schema-1 rows carry no phase column: every pre-phase sample
+            # came from the trainer, so they migrate as phase="train"
+            seq, fp, seconds, step, tag = row[:5]
+            phase = row[5] if len(row) > 5 else "train"
             sink._buf.append(TelemetrySample(int(seq), fp, float(seconds),
                                              None if step is None
-                                             else int(step), tag))
+                                             else int(step), tag, phase))
             sink._refs[fp] += 1
         sink.n_recorded = int(d["n_recorded"])
         return sink

@@ -9,7 +9,17 @@ steps: given an ``ArchConfig``, it emits a property vector whose values are
     B  global batch            S  sequence length
     M  microbatches            (mesh sizes enter via ``shard_env``)
 
-for each of the three step kinds (train / prefill / decode).  Downstream:
+for each of the three phases (train / prefill / decode) of a
+``core.workload.WorkloadSpec``.  Decode specs carrying refinements
+introduce additional variables (only when the spec sets the field — see
+``WorkloadSpec.structure``):
+
+    CT  total context tokens read across slots (KV/SSM cache traffic)
+    AS  occupied decode slots (occupancy-aware per-token work)
+    SL  speculative-decode tokens verified per iteration
+    MI  MoE hottest-expert load multiplier
+
+Downstream:
 
   * ``core.predictor`` evaluates these against a fitted/analytic weight set
     in O(|properties|) — the paper's "small inner product";
@@ -37,6 +47,7 @@ from typing import Dict, Mapping, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core import properties as props
+from repro.core import workload as wl
 from repro.core.symcount import (
     CeilDiv, Const, Expr, ExprLike, Max, Min, Piecewise, Var, add_vectors,
     as_expr, evaluate_vector, scale_vector,
@@ -47,6 +58,10 @@ S = Var("S")   # sequence length (train/prefill) or KV length (decode)
 M = Var("M")   # microbatches
 DP = Var("DP")  # data-parallel ways (product of the plan's dp-axis sizes)
 TP = Var("TP")  # tensor-parallel ways (the plan's tp-axis size)
+CT = Var("CT")  # total cache-context tokens across decode slots
+AS = Var("AS")  # occupied decode slots
+SL = Var("SL")  # speculative-decode length (tokens/iteration/slot)
+MI = Var("MI")  # MoE hottest-expert load multiplier
 
 
 def _bits(cfg: ArchConfig) -> int:
@@ -271,19 +286,74 @@ def train_counts(cfg: ArchConfig,
     return StepCounts(pv=pv, model_flops=model_flops)
 
 
+def _n_attn_layers(cfg: ArchConfig) -> int:
+    if not cfg.n_heads:
+        return 0
+    return (cfg.n_layers // cfg.hybrid.attn_every
+            if cfg.family == "hybrid" else cfg.n_layers)
+
+
+def _cache_write_elems(cfg: ArchConfig) -> ExprLike:
+    """KV/SSM cache elements written when (B, S) prompt tokens prefill
+    their slots: every attention layer stores the tokens' K and V rows;
+    SSM layers store one final recurrent state per sequence."""
+    out: ExprLike = as_expr(0)
+    n_attn = _n_attn_layers(cfg)
+    if n_attn:
+        out = out + as_expr(2 * cfg.n_kv_heads * cfg.head_dim_
+                            * n_attn) * B * S
+    if cfg.ssm is not None:
+        out = out + as_expr(cfg.n_layers * cfg.ssm_heads * cfg.ssm.head_dim
+                            * cfg.ssm.d_state) * B
+    return out
+
+
 def prefill_counts(cfg: ArchConfig) -> StepCounts:
+    """Serving prefill: one forward pass over (B, S) prompt tokens that
+    additionally writes those tokens' KV/SSM cache rows on the way out —
+    the cache-write traffic a pure forward pass does not pay."""
     pv = dict(forward_counts(cfg))
+    bits = _bits(cfg)
+    sk = props.mem_key("store", bits, "s1")
+    pv[sk] = as_expr(pv[sk]) + _cache_write_elems(cfg)
     pv[props.GROUPS] = CeilDiv(B * S, Const(2 ** 14))
     return StepCounts(pv=pv,
                       model_flops=as_expr(2.0 * cfg.n_active_params()) * B * S)
 
 
-def decode_counts(cfg: ArchConfig) -> StepCounts:
-    """One-token decode against a KV/SSM cache of length S (batch B)."""
+def decode_counts(cfg: ArchConfig,
+                  spec: Optional[wl.WorkloadSpec] = None) -> StepCounts:
+    """One decode iteration against KV/SSM caches over B allocated slots.
+
+    With a default ``spec`` (or None) this is the classic per-token count:
+    one token per slot, every slot occupied and full — bitwise the
+    pre-``WorkloadSpec`` closed forms.  Spec refinements swap dedicated
+    free variables into the forms (``WorkloadSpec.structure`` is the
+    program-cache key, so unrefined specs share the default programs):
+
+      * ``cache_tokens`` → ``CT`` replaces the ``B·min(S, window)``
+        cache-read/attention footprint — the total context actually
+        resident across slots;
+      * ``active_slots`` → per-token work (projections, FFN, head, VPU,
+        cache writes) scales with ``AS`` instead of the allocated ``B``;
+      * ``spec_len`` → ``SL`` multiplies token throughput (speculative
+        decoding verifies SL tokens per iteration, each attending the
+        full context);
+      * ``moe_imbalance`` → ``MI`` multiplies expert-FFN compute (the
+        hottest expert paces an EP decode step).
+    """
+    flags = frozenset(spec.structure()[1:]) if spec is not None \
+        else frozenset()
     bits = _bits(cfg)
     L = cfg.n_layers
     pv: Dict[str, ExprLike] = {}
     d = cfg.d_model
+
+    rows = AS if "as" in flags else B            # token rows computed
+    tok = rows * SL if "sl" in flags else rows   # token positions/iteration
+    # total context read this iteration, summed across slots
+    ctx = Min(S, Const(cfg.sliding_window)) if cfg.sliding_window else S
+    ctx_total = CT if "ct" in flags else ctx * B
 
     # per-token projection MACs (no sequence dim)
     if cfg.family == "ssm":
@@ -292,13 +362,15 @@ def decode_counts(cfg: ArchConfig) -> StepCounts:
                                     * cfg.ssm.d_state
                                     + (cfg.ssm.d_conv - 1)
                                     * (cfg.d_inner + 2 * cfg.ssm.n_groups
-                                       * cfg.ssm.d_state)) * B
-        attn_ctx = as_expr(0)
+                                       * cfg.ssm.d_state)) * rows
+        attn_flops = as_expr(0)
     else:
         proj = _attn_proj_macs(cfg)
         if cfg.moe is not None:
-            ff = _ffn_macs(cfg, _moe_active(cfg)) \
-                + _moe_dispatch_macs(cfg, tokens=B)  # decode group = B
+            expert = as_expr(_ffn_macs(cfg, _moe_active(cfg)))
+            if "mi" in flags:
+                expert = expert * MI
+            ff = expert + _moe_dispatch_macs(cfg, tokens=tok)  # group = tok
         else:
             ff = as_expr(_ffn_macs(cfg))
         per_layer = as_expr(proj) + ff
@@ -307,42 +379,46 @@ def decode_counts(cfg: ArchConfig) -> StepCounts:
             per_layer = as_expr(_ssm_macs(cfg)) \
                 + (as_expr(proj) + as_expr(_ffn_macs(cfg))) * (1.0 / k)
         mac = per_layer * L
-        # attention over the cache: 2·KV·hd·ctx MACs per layer (GQA shares)
-        ctx = Min(S, Const(cfg.sliding_window)) if cfg.sliding_window else S
-        n_attn = (L // cfg.hybrid.attn_every) if cfg.family == "hybrid" else L
-        attn_ctx = as_expr(2 * cfg.n_heads * cfg.head_dim_) * ctx * n_attn
-        cache_elems = (as_expr(2 * cfg.n_kv_heads * cfg.head_dim_)
-                       * ctx * n_attn * B)
+        # attention over the caches: 2·H·hd MACs per (new token × context
+        # token) per attention layer (GQA shares the KV rows, not the MACs)
+        n_attn = _n_attn_layers(cfg)
+        attn_flops = as_expr(4 * cfg.n_heads * cfg.head_dim_
+                             * n_attn) * ctx_total
+        if "sl" in flags:
+            attn_flops = attn_flops * SL
+        cache_elems = (as_expr(2 * cfg.n_kv_heads * cfg.head_dim_ * n_attn)
+                       * ctx_total)
         if cfg.family == "hybrid":
-            cache_elems = cache_elems + as_expr(L) * B * (
+            cache_elems = cache_elems + as_expr(L) * rows * (
                 cfg.ssm_heads * cfg.ssm.head_dim * cfg.ssm.d_state)
-    mac = mac + _embed_head_macs(cfg) + attn_ctx
-    pv[props.mxu_key(bits)] = as_expr(2) * mac * B
+    pv[props.mxu_key(bits)] = \
+        as_expr(2) * (mac + _embed_head_macs(cfg)) * tok + attn_flops
 
-    pv = add_vectors(pv, scale_vector(_vpu_layer(cfg), B * L))
+    pv = add_vectors(pv, scale_vector(_vpu_layer(cfg), tok * L))
     # params + cache stream once per decode step
     pv = add_vectors(pv, {
         props.mem_key("load", bits, "s1"): as_expr(cfg.n_params()) + cache_elems,
         props.mem_key("store", bits, "s1"):
-            as_expr(B) * (2 * max(cfg.n_kv_heads, 1) * cfg.head_dim_ if cfg.n_heads
-                          else cfg.d_inner) * L
-            + as_expr(B) * cfg.vocab_size * cfg.n_output_heads,
-        props.mem_key("load", bits, "gather"): as_expr(B) * d,
+            tok * (2 * max(cfg.n_kv_heads, 1) * cfg.head_dim_ if cfg.n_heads
+                   else cfg.d_inner) * L
+            + tok * cfg.vocab_size * cfg.n_output_heads,
+        props.mem_key("load", bits, "gather"): tok * d,
         props.GROUPS: CeilDiv(B, Const(256)),
     })
     return StepCounts(pv=pv,
-                      model_flops=as_expr(2.0 * cfg.n_active_params()) * B)
+                      model_flops=as_expr(2.0 * cfg.n_active_params()) * tok)
 
 
-def counts_for(cfg: ArchConfig, kind: str,
+def counts_for(cfg: ArchConfig, workload: wl.WorkloadLike,
                remat_policy: Optional[str] = None) -> StepCounts:
-    if kind == "train":
+    """Symbolic step counts for a workload — a ``WorkloadSpec``, a
+    ``ShapeConfig``, or (deprecated, warns) a bare phase string."""
+    spec = wl.as_spec(workload)
+    if spec.phase == "train":
         return train_counts(cfg, remat_policy=remat_policy)
-    if kind == "prefill":
+    if spec.phase == "prefill":
         return prefill_counts(cfg)
-    if kind == "decode":
-        return decode_counts(cfg)
-    raise KeyError(kind)
+    return decode_counts(cfg, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -359,10 +435,14 @@ def collective_topology(plan) -> Tuple[bool, Optional[str], str]:
     return (bool(plan.fsdp), plan.compression, plan.moe_mode)
 
 
-def collective_counts_symbolic(cfg: ArchConfig, kind: str,
+def collective_counts_symbolic(cfg: ArchConfig, kind,
                                topology: Tuple[bool, Optional[str], str]
                                ) -> Dict[str, ExprLike]:
     """Per-device collective bytes as Exprs in {B, S, M, DP, TP}.
+
+    ``kind`` may be a phase string or anything with a ``.kind`` (a
+    ``WorkloadSpec`` or ``ShapeConfig``) — collectives depend only on the
+    phase, so the bare string stays first-class here.
 
     The closed forms are ``collective_counts``'s, with the mesh-dependent
     gates (``dp > 1``, ``tp > 1``) expressed as ``Piecewise`` guards on
@@ -373,6 +453,7 @@ def collective_counts_symbolic(cfg: ArchConfig, kind: str,
     interpreted ``collective_counts`` stays the per-plan reference and
     tests pin the two pointwise.
     """
+    kind = getattr(kind, "kind", kind)  # WorkloadSpec/ShapeConfig → phase
     fsdp, compression, moe_mode = topology
     bits = _bits(cfg)
     bytes_per = bits // 8
@@ -420,9 +501,12 @@ def collective_counts_symbolic(cfg: ArchConfig, kind: str,
     return {k: exprops.simplify(v) for k, v in out.items()}
 
 
-def collective_counts(cfg: ArchConfig, kind: str, plan, mesh_shape:
+def collective_counts(cfg: ArchConfig, kind, plan, mesh_shape:
                       Mapping[str, int]) -> Dict[str, ExprLike]:
     """Per-device collective *bytes* per step for a sharding plan.
+
+    ``kind`` may be a phase string or anything with a ``.kind`` (a
+    ``WorkloadSpec``/``ShapeConfig``) — collectives depend only on phase.
 
     Closed forms (ring algorithms, per-device traffic ≈ 2·(n−1)/n·bytes for
     all-reduce, (n−1)/n for all-gather / reduce-scatter):
@@ -432,6 +516,7 @@ def collective_counts(cfg: ArchConfig, kind: str, plan, mesh_shape:
       · TP activation collectives per layer (Megatron: 2 AR fwd (+2 bwd))
       · EP all-to-all dispatch+combine (MoE)
     """
+    kind = getattr(kind, "kind", kind)
     bits = _bits(cfg)
     bytes_per = bits // 8
     dp = 1

@@ -307,39 +307,57 @@ def get(kernel) -> KernelModel:
 # ---------------------------------------------------------------------------
 
 
-def _attn_matmul_shapes(cfg) -> List[Tuple[ExprLike, ExprLike, ExprLike]]:
+def _attn_matmul_shapes(cfg, T: ExprLike) -> List[Tuple[ExprLike, ExprLike,
+                                                        ExprLike]]:
     """Dense projection matmuls of one attention layer, (M, N, K) with the
-    token dim symbolic."""
-    T = B * S
+    token dim ``T`` symbolic."""
     d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     return [(T, H * hd, d), (T, KV * hd, d), (T, KV * hd, d), (T, d, H * hd)]
 
 
-def _ffn_matmul_shapes(cfg) -> List[Tuple[ExprLike, ExprLike, ExprLike]]:
-    T = B * S
+def _ffn_matmul_shapes(cfg, T: ExprLike) -> List[Tuple[ExprLike, ExprLike,
+                                                       ExprLike]]:
     return [(T, cfg.d_ff, cfg.d_model), (T, cfg.d_ff, cfg.d_model),
             (T, cfg.d_model, cfg.d_ff)]
 
 
-def step_kernel_vectors(cfg, kind: str = "train") -> Dict[str, Dict[str, ExprLike]]:
-    """Per-kernel symbolic property vectors for ONE forward pass of ``cfg``
-    over (B, S) tokens, at the kernels' default block sizes.
+def step_kernel_vectors(cfg, workload="train") -> Dict[str, Dict[str, ExprLike]]:
+    """Per-kernel symbolic property vectors for ONE pass of ``cfg``, at the
+    kernels' default block sizes, for any ``workload``
+    (``repro.core.workload.WorkloadLike``; bare phase strings are the
+    deprecated legacy form and warn).
 
     Returns ``{kernel_name: property_vector}`` with the same free variables
-    as ``archcount`` (B, S).  The composition mirrors
+    as ``archcount`` (B, S — plus AS/SL/MI when a decode spec sets the
+    corresponding refinement).  The composition mirrors
     ``archcount._layer_macs`` contraction-for-contraction, so the mxu totals
     agree in the leading term; kernel-level block rounding and the VMEM
     (``local:``) traffic are what this granularity adds.  Contractions with
     no Pallas kernel (MoE dispatch einsum, the SSM short conv, embedding
     gather) stay with archcount's step counts and are NOT counted here.
+
+    Decode emits the per-token dense matmuls only (projections, FFN, LM
+    head, token dim = occupied slots × speculative length): the
+    cache-streaming attention / recurrent-state update of a decode step has
+    no Pallas kernel in this repo, so those counts stay with
+    ``archcount.decode_counts``.
     """
     from repro.core import archcount  # late import: archcount is heavier
+    from repro.core import workload as wl
+    spec = wl.as_spec(workload, _stacklevel=4)
     bits = 16 if "16" in cfg.compute_dtype else 32
-    T = B * S
     L = cfg.n_layers
     out: Dict[str, Dict[str, ExprLike]] = {}
 
-    mm_shapes: List[Tuple[ExprLike, ExprLike, ExprLike, float]] = []
+    decode = spec.phase == "decode"
+    flags = frozenset(spec.structure()[1:])
+    if decode:
+        rows = archcount.AS if "as" in flags else B
+        T = rows * archcount.SL if "sl" in flags else rows
+    else:
+        T = B * S
+
+    mm_shapes: List[Tuple[ExprLike, ExprLike, ExprLike, ExprLike]] = []
     n_attn = 0
     if cfg.family == "ssm":
         n_ssm = L
@@ -351,14 +369,17 @@ def step_kernel_vectors(cfg, kind: str = "train") -> Dict[str, Dict[str, ExprLik
         n_attn = L
 
     if n_attn:
-        for (m, n, k) in _attn_matmul_shapes(cfg):
+        for (m, n, k) in _attn_matmul_shapes(cfg, T):
             mm_shapes.append((m, n, k, float(n_attn)))
         if cfg.moe is not None:
             active = cfg.moe.top_k * cfg.moe.capacity_factor
-            for (m, n, k) in _ffn_matmul_shapes(cfg):
-                mm_shapes.append((m, n, k, float(n_attn) * active))
+            expert_mult: ExprLike = float(n_attn) * active
+            if decode and "mi" in flags:
+                expert_mult = as_expr(expert_mult) * archcount.MI
+            for (m, n, k) in _ffn_matmul_shapes(cfg, T):
+                mm_shapes.append((m, n, k, expert_mult))
         else:
-            for (m, n, k) in _ffn_matmul_shapes(cfg):
+            for (m, n, k) in _ffn_matmul_shapes(cfg, T):
                 mm_shapes.append((m, n, k, float(n_attn)))
     if n_ssm:
         s = cfg.ssm
@@ -378,13 +399,13 @@ def step_kernel_vectors(cfg, kind: str = "train") -> Dict[str, Dict[str, ExprLik
             matmul_vector(m, n, k, bits=bits), mult))
     out["matmul"] = mm_pv
 
-    if n_attn:
+    if n_attn and not decode:
         out["flash_attention"] = scale_vector(
             flash_attention_vector(B, cfg.n_heads, cfg.n_kv_heads, S, S,
                                    cfg.head_dim_, causal=True,
                                    window=cfg.sliding_window, bits=bits),
             float(n_attn))
-    if n_ssm:
+    if n_ssm and not decode:
         s = cfg.ssm
         out["ssd_scan"] = scale_vector(
             ssd_scan_vector(B, cfg.ssm_heads, S, s.head_dim, s.d_state,
@@ -396,8 +417,10 @@ def step_kernel_vectors(cfg, kind: str = "train") -> Dict[str, Dict[str, ExprLik
     # without dropping terms (MoE dense dispatch/combine, SSM short conv)
     extra = as_expr(0)
     if n_attn and cfg.moe is not None:
-        extra = extra + archcount._moe_dispatch_macs(cfg) * float(n_attn)
-    if n_ssm:
+        dispatch = archcount._moe_dispatch_macs(cfg, tokens=T) if decode \
+            else archcount._moe_dispatch_macs(cfg)
+        extra = extra + dispatch * float(n_attn)
+    if n_ssm and not decode:
         s = cfg.ssm
         extra = extra + float((cfg.d_inner + 2 * s.n_groups * s.d_state)
                               * s.d_conv * n_ssm)
@@ -406,7 +429,7 @@ def step_kernel_vectors(cfg, kind: str = "train") -> Dict[str, Dict[str, ExprLik
     return out
 
 
-def step_compute_vector(cfg, kind: str = "train") -> Dict[str, ExprLike]:
+def step_compute_vector(cfg, workload="train") -> Dict[str, ExprLike]:
     """The summed compute-side (mxu + VMEM local) vector of one forward
     pass, built from the per-kernel vectors.  barrier/groups/const1 stay at
     STEP granularity (archcount's), not per-launch — a fitted per-launch
@@ -418,7 +441,10 @@ def step_compute_vector(cfg, kind: str = "train") -> Dict[str, ExprLike]:
     them here shrinks both the per-property compiled closures and the
     fused basis programs built downstream."""
     from repro.core import exprops
-    total = add_vectors(*step_kernel_vectors(cfg, kind).values())
+    from repro.core import workload as wl
+    total = add_vectors(
+        *step_kernel_vectors(cfg, wl.as_spec(workload, _stacklevel=4))
+        .values())
     keep = ("mxu:", "local:")
     return {k: exprops.simplify(v) for k, v in total.items()
             if k.startswith(keep)}

@@ -42,7 +42,9 @@ from repro.core import archcount
 from repro.core import exprops
 from repro.core import predictor
 from repro.core import properties as props
+from repro.core import workload as wl
 from repro.core.lru import LRUCache
+from repro.core.workload import WorkloadSpec
 
 Mesh = Dict[str, int]
 Cell = Tuple[object, Mapping[str, int]]  # (Plan, mesh_shape)
@@ -257,10 +259,12 @@ class PlanSpace:
 
     ``plans[i]`` / ``mesh_shapes[i]`` describe cell *i*; the numpy columns
     (``dp``, ``tp``, ``n_dev``, ``microbatches``) are what the vectorized
-    evaluators consume.  Build with ``from_cells`` / ``from_product``.
+    evaluators consume.  Build with ``from_cells`` / ``from_product`` —
+    both accept any ``workload.WorkloadLike`` (a ``WorkloadSpec``, a
+    ``ShapeConfig``, or the deprecated phase string) and normalize it.
     """
     cfg: ArchConfig
-    shape: ShapeConfig
+    workload: WorkloadSpec
     plans: List[object]
     mesh_shapes: List[Mesh]
     dp: np.ndarray            # data-parallel ways per cell (int64)
@@ -280,20 +284,30 @@ class PlanSpace:
     #: the frozen ArchConfig key on every repeat ``scores`` call)
     _progs: Dict[object, object] = field(default_factory=dict, repr=False)
 
-    def _group_program(self, kind: str, group_key, remat) -> object:
+    @property
+    def shape(self) -> WorkloadSpec:
+        """Backward-compat alias: the workload duck-types the old
+        ``ShapeConfig`` attribute surface (``kind``/``global_batch``/
+        ``seq_len``)."""
+        return self.workload
+
+    def _group_program(self, group_key, remat) -> object:
         prog = self._progs.get(group_key)
         if prog is None:
             if group_key[0] == "step":
-                prog = predictor.step_program(self.cfg, kind, remat)
+                prog = predictor.step_program(self.cfg, self.workload,
+                                              remat)
             else:
-                prog = _collective_program(self.cfg, kind, remat)
+                prog = _collective_program(self.cfg, self.workload.phase,
+                                           remat)
             self._progs[group_key] = prog
         return prog
 
     # -- construction ------------------------------------------------------
     @classmethod
-    def from_cells(cls, cfg: ArchConfig, shape: ShapeConfig,
+    def from_cells(cls, cfg: ArchConfig, workload: wl.WorkloadLike,
                    cells: Sequence[Cell]) -> "PlanSpace":
+        spec = wl.as_spec(workload)
         plans = [p for p, _ in cells]
         meshes = [dict(m) for _, m in cells]
         dp = np.asarray([_axis_product(m, p.dp_axes)
@@ -303,11 +317,11 @@ class PlanSpace:
         n_dev = np.asarray([max(prod(m.values()), 1) if m else 1
                             for m in meshes], dtype=np.int64)
         mb = np.asarray([p.microbatches for p in plans], dtype=np.int64)
-        return cls(cfg=cfg, shape=shape, plans=plans, mesh_shapes=meshes,
+        return cls(cfg=cfg, workload=spec, plans=plans, mesh_shapes=meshes,
                    dp=dp, tp=tp, n_dev=n_dev, microbatches=mb)
 
     @classmethod
-    def from_product(cls, cfg: ArchConfig, shape: ShapeConfig,
+    def from_product(cls, cfg: ArchConfig, workload: wl.WorkloadLike,
                      plans: Sequence, meshes: Sequence[Mapping[str, int]]
                      ) -> "PlanSpace":
         """Plan-major cross product: cell (i·len(meshes) + j) = plan i on
@@ -318,6 +332,7 @@ class PlanSpace:
         Python, not O(n_cells) — and the evaluation groups (remat
         schedule, collective topology class) are computed on the plan
         list and expanded arithmetically."""
+        spec = wl.as_spec(workload)
         plans = list(plans)
         meshes = [dict(m) for m in meshes]
         n_p, n_m = len(plans), len(meshes)
@@ -356,7 +371,7 @@ class PlanSpace:
             plan_dp_axes=[p.dp_axes for p in plans],
             plan_tp_axis=[p.tp_axis for p in plans],
             remat_plan_groups=remat_p, topo_plan_groups=topo_p)
-        return cls(cfg=cfg, shape=shape,
+        return cls(cfg=cfg, workload=spec,
                    plans=[p for p in plans for _ in range(n_m)],
                    mesh_shapes=meshes * n_p,
                    dp=dp, tp=tp, n_dev=n_dev, microbatches=mb,
@@ -390,7 +405,7 @@ class PlanSpace:
             return out
 
         return PlanSpace(
-            cfg=self.cfg, shape=self.shape,
+            cfg=self.cfg, workload=self.workload,
             plans=[self.plans[i] for i in idx],
             mesh_shapes=[self.mesh_shapes[i] for i in idx],
             dp=self.dp[idx], tp=self.tp[idx], n_dev=self.n_dev[idx],
@@ -404,8 +419,7 @@ class PlanSpace:
         ``{key: (n_cells,) float64}``.  Row i of the implied matrix equals
         ``predictor.plan_property_vector`` for cell i (absent keys = 0)."""
         n = len(self)
-        kind = self.shape.kind
-        B, S = self.shape.global_batch, self.shape.seq_len
+        base_env = self.workload.env(self.cfg)
         out: Dict[str, np.ndarray] = {}
 
         def acc(key: str, idx: np.ndarray, vals: np.ndarray) -> None:
@@ -420,8 +434,8 @@ class PlanSpace:
         remat_groups = self.remat_groups if self.remat_groups is not None \
             else _group_indices([p.remat_policy for p in self.plans])
         for remat, idx in remat_groups.items():
-            cv = predictor.step_vector_fn(self.cfg, kind, remat)
-            env = {"B": B, "S": S, "M": self.microbatches[idx]}
+            cv = predictor.step_vector_fn(self.cfg, self.workload, remat)
+            env = {**base_env, "M": self.microbatches[idx]}
             for k, v in cv(env).items():
                 v = np.broadcast_to(
                     np.asarray(v, dtype=np.float64), idx.shape)
@@ -433,8 +447,8 @@ class PlanSpace:
             else _group_indices(
                 [archcount.collective_topology(p) for p in self.plans])
         for topo, idx in topo_groups.items():
-            cv = _collective_vector_fn(self.cfg, kind, topo)
-            env = {"B": B, "S": S, "M": self.microbatches[idx],
+            cv = _collective_vector_fn(self.cfg, self.workload.phase, topo)
+            env = {**base_env, "M": self.microbatches[idx],
                    "DP": self.dp[idx], "TP": self.tp[idx]}
             for k, v in cv(env).items():
                 acc(k, idx, np.broadcast_to(
@@ -456,8 +470,7 @@ class PlanSpace:
         column path this is pinned against (rtol ≤ 1e-9)."""
         m = predictor.resolve_model(model)
         n = len(self)
-        kind = self.shape.kind
-        B, S = self.shape.global_batch, self.shape.seq_len
+        base_env = self.workload.env(self.cfg)
         w1 = 0.0
         for k, w in zip(m.keys, m.weights):
             if k == props.CONST1:
@@ -471,8 +484,8 @@ class PlanSpace:
         remat_groups = self.remat_groups if self.remat_groups is not None \
             else _group_indices([p.remat_policy for p in self.plans])
         for remat, idx in remat_groups.items():
-            prog = predictor.step_program(self.cfg, kind, remat)
-            env = {"B": B, "S": S, "M": self.microbatches[idx]}
+            prog = predictor.step_program(self.cfg, self.workload, remat)
+            env = {**base_env, "M": self.microbatches[idx]}
             s = exprops.score_cells(prog, env, len(idx), m, cache)
             total[idx] += s / self.n_dev[idx]   # SPMD work division
 
@@ -480,8 +493,8 @@ class PlanSpace:
             else _group_indices(
                 [archcount.collective_topology(p) for p in self.plans])
         for topo, idx in topo_groups.items():
-            prog = _collective_program(self.cfg, kind, topo)
-            env = {"B": B, "S": S, "M": self.microbatches[idx],
+            prog = _collective_program(self.cfg, self.workload.phase, topo)
+            env = {**base_env, "M": self.microbatches[idx],
                    "DP": self.dp[idx], "TP": self.tp[idx]}
             total[idx] += exprops.score_cells(prog, env, len(idx), m, cache)
         return total
@@ -495,16 +508,15 @@ class PlanSpace:
         expression over the (n_plans, n_meshes) grid.  n_cells never
         enters a program evaluation."""
         pi = self.product
-        kind = self.shape.kind
-        B, S = self.shape.global_batch, self.shape.seq_len
+        base_env = self.workload.env(self.cfg)
         n_m = pi.n_m
         n_p = len(pi.plan_mb)
 
         # step terms: one evaluation per DISTINCT microbatch per schedule
         s_plan = np.zeros(n_p, dtype=np.float64)
         for remat, pidx, umb, inv in pi.step_envs():
-            prog = self._group_program(kind, ("step", remat), remat)
-            s = np.asarray(prog.score({"B": B, "S": S, "M": umb}, m),
+            prog = self._group_program(("step", remat), remat)
+            s = np.asarray(prog.score({**base_env, "M": umb}, m),
                            dtype=np.float64)
             if s.shape != umb.shape:
                 s = np.broadcast_to(s, umb.shape)
@@ -516,9 +528,9 @@ class PlanSpace:
         S_rows = np.empty((n_rows, n_m), dtype=np.float64)
         base = 0
         for topo, n_prof, Mc, DPc, TPc in groups:
-            prog = self._group_program(kind, ("coll", topo), topo)
+            prog = self._group_program(("coll", topo), topo)
             s = np.asarray(prog.score(
-                {"B": B, "S": S, "M": Mc, "DP": DPc, "TP": TPc}, m),
+                {**base_env, "M": Mc, "DP": DPc, "TP": TPc}, m),
                 dtype=np.float64)
             if s.shape != (n_prof * n_m,):
                 s = np.broadcast_to(s, (n_prof * n_m,))
@@ -577,7 +589,7 @@ class PlanSpace:
     # -- feasibility -------------------------------------------------------
     def peak_bytes(self) -> np.ndarray:
         """Closed-form peak HBM bytes/device per cell, one numpy pass."""
-        return _peak_bytes_soa(self.cfg, self.shape, self.plans,
+        return _peak_bytes_soa(self.cfg, self.workload, self.plans,
                                self.dp, self.tp)
 
     def feasible_mask(self, budget: Optional[float] = None) -> np.ndarray:
@@ -591,13 +603,15 @@ class PlanSpace:
 # ---------------------------------------------------------------------------
 
 
-def _peak_bytes_soa(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+def _peak_bytes_soa(cfg: ArchConfig, shape, plans: Sequence,
                     dp: np.ndarray, tp: np.ndarray) -> np.ndarray:
     """``predictor.estimate_peak_bytes`` over candidate arrays.  The plan
     booleans become masks, the mesh ways are the dp/tp columns, and every
     branch of the scalar formula lowers to ``np.where`` — the scalar
     version delegates here with single-element arrays, so there is exactly
-    one copy of the napkin math."""
+    one copy of the napkin math.  ``shape`` is anything exposing
+    ``kind``/``global_batch``/``seq_len`` (a ``WorkloadSpec`` or a
+    ``ShapeConfig``)."""
     dp = np.asarray(dp, dtype=np.float64)
     tp = np.asarray(tp, dtype=np.float64)
     # dtype=bool: an empty list would otherwise default to float64 and
@@ -654,14 +668,15 @@ def _peak_bytes_soa(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
     return np.asarray(total, dtype=np.float64)
 
 
-def peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+def peak_bytes(cfg: ArchConfig, workload: wl.WorkloadLike, plans: Sequence,
                mesh_shapes: Sequence[Mapping[str, int]]) -> np.ndarray:
     """Peak HBM bytes/device for parallel (plan, mesh) candidate lists."""
+    spec = wl.as_spec(workload)
     dp = np.asarray([_axis_product(m, p.dp_axes)
                      for p, m in zip(plans, mesh_shapes)], dtype=np.int64)
     tp = np.asarray([m.get(p.tp_axis, 1) if p.tp_axis else 1
                      for p, m in zip(plans, mesh_shapes)], dtype=np.int64)
-    return _peak_bytes_soa(cfg, shape, plans, dp, tp)
+    return _peak_bytes_soa(cfg, spec, plans, dp, tp)
 
 
 # ---------------------------------------------------------------------------
@@ -669,7 +684,7 @@ def peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
 # ---------------------------------------------------------------------------
 
 
-def iter_product_chunks(cfg: ArchConfig, shape: ShapeConfig,
+def iter_product_chunks(cfg: ArchConfig, workload: wl.WorkloadLike,
                         plans: Sequence, meshes: Sequence[Mapping[str, int]],
                         chunk_cells: int = 65536):
     """Yield ``(cell_offset, PlanSpace)`` tiles of the plan-major product
@@ -680,6 +695,7 @@ def iter_product_chunks(cfg: ArchConfig, shape: ShapeConfig,
     cells land at ``offset + local_index`` in the full product's plan-major
     order — per-cell results are bit-identical to scoring the whole space
     at once, only the peak footprint changes."""
+    spec = wl.as_spec(workload)
     plans = list(plans)
     meshes = [dict(m) for m in meshes]
     n_p, n_m = len(plans), len(meshes)
@@ -690,18 +706,18 @@ def iter_product_chunks(cfg: ArchConfig, shape: ShapeConfig,
         for i in range(n_p):             # one plan row, mesh-tiled
             for j0 in range(0, n_m, chunk_cells):
                 sub = PlanSpace.from_product(
-                    cfg, shape, plans[i:i + 1],
+                    cfg, spec, plans[i:i + 1],
                     meshes[j0:j0 + chunk_cells])
                 yield i * n_m + j0, sub
     else:
         p_step = max(chunk_cells // n_m, 1)
         for i0 in range(0, n_p, p_step):
-            sub = PlanSpace.from_product(cfg, shape, plans[i0:i0 + p_step],
+            sub = PlanSpace.from_product(cfg, spec, plans[i0:i0 + p_step],
                                          meshes)
             yield i0 * n_m, sub
 
 
-def stream_topk(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
+def stream_topk(cfg: ArchConfig, workload: wl.WorkloadLike, plans: Sequence,
                 meshes: Sequence[Mapping[str, int]], model=None,
                 k: int = 5, chunk_cells: int = 65536,
                 hbm_budget: Optional[float] = None,
@@ -721,13 +737,14 @@ def stream_topk(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
     if k <= 0:
         return []
     m = predictor.resolve_model(model)
+    spec = wl.as_spec(workload)
     plans = list(plans)
     meshes = [dict(mm) for mm in meshes]
     n_m = len(meshes)
     best_secs = np.zeros(0, dtype=np.float64)
     best_idx = np.zeros(0, dtype=np.int64)
     n_chunks = max_chunk = pool_hw = pruned = total_cells = 0
-    for off, sub in iter_product_chunks(cfg, shape, plans, meshes,
+    for off, sub in iter_product_chunks(cfg, spec, plans, meshes,
                                         chunk_cells):
         n_chunks += 1
         max_chunk = max(max_chunk, len(sub))
@@ -776,41 +793,17 @@ def stream_topk(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
 # ---------------------------------------------------------------------------
 
 
-def cotune_kernel_blocks(cfg: ArchConfig, shape: ShapeConfig, plan,
+def cotune_kernel_blocks(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
                          mesh_shape: Mapping[str, int], model=None
                          ) -> Dict[str, Dict[str, int]]:
     """Model-chosen block sizes for the step's dominant kernels at this
     (plan, mesh) cell's *per-device* shard shapes — the joint plan × block
-    co-tuning hook, reusing ``kernels/autotune.py``'s compiled grids."""
+    co-tuning hook.  The plan/mesh pin the sharding (dp/tp ways, schedule);
+    the per-kernel shape derivation and tuning live in
+    ``kernels/autotune.best_blocks_for_workload``."""
     from repro.kernels import autotune
+    spec = wl.as_spec(workload)
     dp = _axis_product(mesh_shape, plan.dp_axes)
     tp = mesh_shape.get(plan.tp_axis, 1) if plan.tp_axis else 1
-    bits = 16 if "16" in cfg.compute_dtype else 32
-    if shape.kind == "decode":
-        tok = max(shape.global_batch // dp, 1)
-        b_dev = tok
-    else:
-        b_dev = max(shape.global_batch // (dp * max(plan.microbatches, 1)),
-                    1)
-        tok = b_dev * shape.seq_len
-
-    out: Dict[str, Dict[str, int]] = {}
-    if cfg.d_ff:
-        out["matmul"] = autotune.best_block_sizes(
-            "matmul", {"M": tok, "N": max(cfg.d_ff // tp, 1),
-                       "K": cfg.d_model, "bits": bits}, model)
-    if cfg.n_heads and shape.kind != "decode":
-        out["flash_attention"] = autotune.best_block_sizes(
-            "flash_attention",
-            {"B": b_dev, "H": max(cfg.n_heads // tp, 1),
-             "KVH": max(cfg.n_kv_heads // tp, 1),
-             "Sq": shape.seq_len, "Skv": shape.seq_len,
-             "dh": cfg.head_dim_, "causal": True,
-             "window": cfg.sliding_window, "bits": bits}, model)
-    if cfg.ssm is not None and shape.kind != "decode":
-        out["ssd_scan"] = autotune.best_block_sizes(
-            "ssd_scan",
-            {"Bz": b_dev, "H": max(cfg.ssm_heads // tp, 1),
-             "L": shape.seq_len, "P": cfg.ssm.head_dim,
-             "N": cfg.ssm.d_state, "bits": bits}, model)
-    return out
+    return autotune.best_blocks_for_workload(
+        cfg, spec, model, dp=dp, tp=tp, microbatches=plan.microbatches)

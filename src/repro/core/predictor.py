@@ -30,8 +30,10 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import archcount
 from repro.core import properties as props
+from repro.core import workload as wl
 from repro.core.lru import LRUCache
 from repro.core.model import LinearCostModel
+from repro.core.workload import WorkloadSpec
 
 # --- v5e hardware constants (per chip) ---
 PEAK_FLOPS_BF16 = 197e12     # FLOP/s
@@ -105,25 +107,30 @@ class StepPrediction:
     mfu: float                       # MODEL_FLOPS / (chips·peak·seconds)
 
 
-def _env_for(shape: ShapeConfig, microbatches: int = 1) -> Dict[str, float]:
-    # one env for every step kind: decode's S is the KV/cache length
-    return {"B": shape.global_batch, "S": shape.seq_len, "M": microbatches}
+def _env_for(spec: WorkloadSpec, cfg: Optional[ArchConfig] = None,
+             microbatches: int = 1) -> Dict[str, float]:
+    # one env for every phase: the spec pins B/S (+ decode refinements),
+    # the plan's schedule overrides M
+    env = spec.env(cfg)
+    env["M"] = microbatches
+    return env
 
 
 # ---------------------------------------------------------------------------
 # Compiled step vectors — kernel-granularity compute terms
 # ---------------------------------------------------------------------------
 
-#: (cfg, kind, remat_policy) -> symcount.CompiledVector.  Step vectors are
-#: pure functions of those three; compiling once and evaluating per-env
-#: replaces the per-plan interpreted tree-walks in every plan search.
+#: (cfg, spec.structure(), remat_policy) -> symcount.CompiledVector.  Step
+#: vectors are pure functions of those three — a spec's SHAPE enters only
+#: through the evaluation env, so every spec sharing a structure (phase +
+#: which decode refinements are modeled) shares one compiled vector.
 #: Bounded LRU: each key pins a whole frozen ``ArchConfig`` (plus its
 #: compiled closures), so the cache must not grow with every config a
 #: long-lived process ever scores.
 _STEP_PV_CACHE: LRUCache = LRUCache(maxsize=64)
 
 
-def _step_pv_sym(cfg: ArchConfig, kind: str,
+def _step_pv_sym(cfg: ArchConfig, spec: WorkloadSpec,
                  remat_policy: Optional[str] = None, _sc=None):
     """The symbolic property-vector map of one step of ``cfg`` — the shared
     source for both the per-property compiled path (``step_vector_fn``) and
@@ -140,12 +147,12 @@ def _step_pv_sym(cfg: ArchConfig, kind: str,
     """
     from repro.core import kernelmodel
     from repro.core.symcount import as_expr
-    sc = _sc or archcount.counts_for(cfg, kind, remat_policy=remat_policy)
+    sc = _sc or archcount.counts_for(cfg, spec, remat_policy=remat_policy)
     pv_sym = dict(sc.pv)
-    if kind in ("train", "prefill"):
+    if spec.phase in ("train", "prefill"):
         mult = archcount.train_fwd_multiplier(cfg, remat_policy) \
-            if kind == "train" else 1.0
-        kpv = kernelmodel.step_compute_vector(cfg, kind)
+            if spec.phase == "train" else 1.0
+        kpv = kernelmodel.step_compute_vector(cfg, spec)
         for k, v in kpv.items():
             scaled = as_expr(v) * mult
             if k.startswith("mxu:"):
@@ -156,7 +163,15 @@ def _step_pv_sym(cfg: ArchConfig, kind: str,
     return pv_sym
 
 
-def step_vector_fn(cfg: ArchConfig, kind: str,
+def _structure_key(spec: WorkloadSpec):
+    """Cache-key part for a spec: the bare phase string when no refinement
+    is modeled (bit-compatible with the pre-spec ``kind=`` disk keys, so
+    existing compile caches stay warm), the full structure tuple otherwise."""
+    st = spec.structure()
+    return st[0] if len(st) == 1 else st
+
+
+def step_vector_fn(cfg: ArchConfig, workload: wl.WorkloadLike,
                    remat_policy: Optional[str] = None, _sc=None):
     """Compiled symbolic property vector for one step of ``cfg`` (one
     closure per property — see ``_step_pv_sym`` for what the vector holds).
@@ -164,37 +179,41 @@ def step_vector_fn(cfg: ArchConfig, kind: str,
     this per-property form stays as the reference the fused path is pinned
     against, and serves ``plan_property_vector`` / ``predict_step``."""
     from repro.core.symcount import compile_vector
-    key = (cfg, kind, remat_policy)
+    spec = wl.as_spec(workload)
+    key = (cfg, spec.structure(), remat_policy)
     cv = _STEP_PV_CACHE.get(key)
     if cv is None:
-        cv = compile_vector(_step_pv_sym(cfg, kind, remat_policy, _sc=_sc))
+        cv = compile_vector(_step_pv_sym(cfg, spec, remat_policy, _sc=_sc))
         _STEP_PV_CACHE[key] = cv
     return cv
 
 
-#: (cfg, kind, remat) -> exprops.BasisProgram — the fused-GEMV step scorer.
+#: (cfg, structure, remat) -> exprops.BasisProgram — the fused-GEMV step
+#: scorer.
 _STEP_PROG_CACHE: LRUCache = LRUCache(maxsize=64)
 
 
-def step_program(cfg: ArchConfig, kind: str,
+def step_program(cfg: ArchConfig, workload: wl.WorkloadLike,
                  remat_policy: Optional[str] = None):
     """The step property vector as a FUSED basis program
     (``core.exprops``): canonicalized, cross-property CSE'd, scored as one
     GEMV.  In-memory LRU over the persistent on-disk compile cache — the
-    disk key derives from (cfg, kind, remat) so a warm cache skips building
-    the symbolic counts entirely."""
+    disk key derives from (cfg, spec structure, remat) so a warm cache
+    skips building the symbolic counts entirely."""
     from repro.core import exprops
-    key = (cfg, kind, remat_policy)
+    spec = wl.as_spec(workload)
+    key = (cfg, spec.structure(), remat_policy)
     prog = _STEP_PROG_CACHE.get(key)
     if prog is None:
-        dk = exprops.program_key("step", cfg, kind, remat_policy)
+        dk = exprops.program_key("step", cfg, _structure_key(spec),
+                                 remat_policy)
         prog = exprops.load_or_build(
-            dk, lambda: _step_pv_sym(cfg, kind, remat_policy))
+            dk, lambda: _step_pv_sym(cfg, spec, remat_policy))
         _STEP_PROG_CACHE[key] = prog
     return prog
 
 
-def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
+def plan_property_vector(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
                          mesh_shape: Mapping[str, int],
                          _count_cache: Optional[dict] = None,
                          _sc=None) -> Dict[str, float]:
@@ -208,28 +227,27 @@ def plan_property_vector(cfg: ArchConfig, shape: ShapeConfig, plan,
     ``predict_step``, which also needs ``concrete_model_flops``) avoid
     rebuilding them.
     """
+    spec = wl.as_spec(workload)
     n_dev = int(np.prod(list(mesh_shape.values()))) or 1
-    env = _env_for(shape, plan.microbatches)
+    env = _env_for(spec, cfg, plan.microbatches)
 
     ck = (plan.remat_policy, plan.microbatches)
     cached = _count_cache.get(ck) if _count_cache is not None else None
     if cached is None:
-        cv = step_vector_fn(cfg, shape.kind, plan.remat_policy, _sc=_sc)
-        full = dict(env)
-        full.setdefault("M", 1)
-        cached = {k: float(v) for k, v in cv(full).items()}
+        cv = step_vector_fn(cfg, spec, plan.remat_policy, _sc=_sc)
+        cached = {k: float(v) for k, v in cv(env).items()}
         if _count_cache is not None:
             _count_cache[ck] = cached
     # compute/memory events divide over the mesh (SPMD work division)
     pv = {k: v / n_dev for k, v in cached.items()}
-    coll = archcount.collective_counts(cfg, shape.kind, plan, mesh_shape)
+    coll = archcount.collective_counts(cfg, spec, plan, mesh_shape)
     from repro.core.symcount import evaluate_vector
     pv.update(evaluate_vector(coll, env))
     pv[props.CONST1] = 1.0
     return pv
 
 
-def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
+def predict_step(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
                  mesh_shape: Mapping[str, int],
                  weights: ModelLike = None,
                  residual=None) -> StepPrediction:
@@ -242,12 +260,13 @@ def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
     stays analytic; the head's contribution appears as a ``residual``
     term and scales ``seconds``/``mfu``."""
     weights = resolve_model(weights)
+    spec = wl.as_spec(workload)
     n_dev = int(np.prod(list(mesh_shape.values()))) or 1
-    env = _env_for(shape, plan.microbatches)
+    env = _env_for(spec, cfg, plan.microbatches)
 
-    sc = archcount.counts_for(cfg, shape.kind,
+    sc = archcount.counts_for(cfg, spec,
                               remat_policy=plan.remat_policy)
-    pv = plan_property_vector(cfg, shape, plan, mesh_shape, _sc=sc)
+    pv = plan_property_vector(cfg, spec, plan, mesh_shape, _sc=sc)
 
     bd = weights.breakdown(pv)
     total = sum(bd.values())
@@ -271,8 +290,8 @@ def predict_step(cfg: ArchConfig, shape: ShapeConfig, plan,
                           model_flops=mf, mfu=mfu)
 
 
-def predict_plans(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
-                  mesh_shape: Mapping[str, int],
+def predict_plans(cfg: ArchConfig, workload: wl.WorkloadLike,
+                  plans: Sequence, mesh_shape: Mapping[str, int],
                   weights: ModelLike = None, cache=None) -> np.ndarray:
     """Batched step-time prediction: seconds for every candidate plan.
 
@@ -291,16 +310,17 @@ def predict_plans(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
     ``StragglerMonitor`` fast path.
     """
     weights = resolve_model(weights)
+    spec = wl.as_spec(workload)
     if not len(plans):
         return np.zeros((0,))
     from repro.core import planspace  # planspace sits above predictor
-    space = planspace.PlanSpace.from_product(cfg, shape, list(plans),
+    space = planspace.PlanSpace.from_product(cfg, spec, list(plans),
                                              [dict(mesh_shape)])
     return space.scores(weights, cache=cache)
 
 
-def predict_plans_loop(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
-                       mesh_shape: Mapping[str, int],
+def predict_plans_loop(cfg: ArchConfig, workload: wl.WorkloadLike,
+                       plans: Sequence, mesh_shape: Mapping[str, int],
                        weights: ModelLike = None) -> np.ndarray:
     """Reference scorer: per-plan ``plan_property_vector`` + one
     ``predict_many``.  Semantically identical to ``predict_plans``; kept as
@@ -308,16 +328,17 @@ def predict_plans_loop(cfg: ArchConfig, shape: ShapeConfig, plans: Sequence,
     baseline ``benchmarks/search_bench.py`` times the engine's speedup
     over."""
     weights = resolve_model(weights)
+    spec = wl.as_spec(workload)
     count_cache: dict = {}
     pvs: List[Dict[str, float]] = [
-        plan_property_vector(cfg, shape, p, mesh_shape, count_cache)
+        plan_property_vector(cfg, spec, p, mesh_shape, count_cache)
         for p in plans]
     if not pvs:
         return np.zeros((0,))
     return np.asarray(weights.predict_many(pvs), dtype=np.float64)
 
 
-def rank_plans(cfg: ArchConfig, shape: ShapeConfig, plans,
+def rank_plans(cfg: ArchConfig, workload: wl.WorkloadLike, plans,
                mesh_shape: Mapping[str, int],
                weights: ModelLike = None):
     """Sort candidate plans by predicted step time (ascending) — the paper's
@@ -327,7 +348,7 @@ def rank_plans(cfg: ArchConfig, shape: ShapeConfig, plans,
     the plans' own fields (``planspace.plan_sort_key``), never on the
     caller's enumeration order."""
     from repro.core.planspace import plan_sort_key
-    secs = predict_plans(cfg, shape, plans, mesh_shape, weights)
+    secs = predict_plans(cfg, workload, plans, mesh_shape, weights)
     order = sorted(range(len(plans)),
                    key=lambda i: (secs[i], plan_sort_key(plans[i])))
     return [(float(secs[i]), plans[i]) for i in order]
@@ -341,7 +362,7 @@ def rank_plans(cfg: ArchConfig, shape: ShapeConfig, plans,
 HBM_BYTES = 16e9  # v5e
 
 
-def estimate_peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plan,
+def estimate_peak_bytes(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
                         mesh_shape: Mapping[str, int]) -> float:
     """Closed-form peak HBM bytes/device for a plan (napkin-math grade:
     params + optimizer + gradients + activation working set or caches).
@@ -351,10 +372,11 @@ def estimate_peak_bytes(cfg: ArchConfig, shape: ShapeConfig, plan,
     the one-cell special case, so a batched feasibility sweep and the
     per-plan call can never drift apart."""
     from repro.core import planspace
-    return float(planspace.peak_bytes(cfg, shape, [plan], [mesh_shape])[0])
+    spec = wl.as_spec(workload)
+    return float(planspace.peak_bytes(cfg, spec, [plan], [mesh_shape])[0])
 
 
-def feasible(cfg: ArchConfig, shape: ShapeConfig, plan,
+def feasible(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
              mesh_shape: Mapping[str, int],
              budget: float = HBM_BYTES) -> bool:
-    return estimate_peak_bytes(cfg, shape, plan, mesh_shape) <= budget
+    return estimate_peak_bytes(cfg, workload, plan, mesh_shape) <= budget

@@ -16,6 +16,7 @@ from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import exprops, planspace, predictor
+from repro.core import workload as wl
 from repro.distributed.plan import Plan, plan_for
 
 #: incremental-rescore cache for the failure path: basis columns keyed by
@@ -38,7 +39,7 @@ def _factorizations(n: int) -> List[Tuple[int, int]]:
     return planspace.factor_pairs(n)
 
 
-def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
+def replan(cfg: ArchConfig, shape: wl.WorkloadLike, n_devices: int,
            weights: predictor.ModelLike = None,
            max_candidates: int = 64) -> List[MeshOption]:
     """Rank feasible (data × model) meshes for ``n_devices`` survivors.
@@ -58,16 +59,17 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
     docs/MODEL.md §2.7).
     """
     weights = predictor.resolve_model(weights)  # once, not per candidate
+    spec = wl.as_spec(shape)    # any WorkloadLike; one currency from here
     cells: List[Tuple[Plan, Dict[str, int]]] = []
     for dp, tp in _factorizations(n_devices)[:max_candidates]:
-        if shape.kind == "train" and shape.global_batch % dp != 0:
+        if spec.phase == "train" and spec.global_batch % dp != 0:
             continue
-        plan = plan_for(cfg, shape, multi_pod=False, tp_size=tp)
+        plan = plan_for(cfg, spec, multi_pod=False, tp_size=tp)
         plan = dataclasses.replace(plan, dp_axes=("data",))
         cells.append((plan, {"data": dp, "model": tp}))
     if not cells:
         return []
-    space = planspace.PlanSpace.from_cells(cfg, shape, cells)
+    space = planspace.PlanSpace.from_cells(cfg, spec, cells)
     secs = space.scores(weights, cache=_BASIS_CACHE)
     opts = [MeshOption(mesh, plan, float(s))
             for (plan, mesh), s in zip(cells, secs)]
@@ -76,7 +78,7 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
     return opts
 
 
-def on_failure(cfg: ArchConfig, shape: ShapeConfig, prev_devices: int,
+def on_failure(cfg: ArchConfig, shape: wl.WorkloadLike, prev_devices: int,
                lost: int, weights: predictor.ModelLike = None
                ) -> MeshOption:
     """Failure handler: fall back to the best mesh over the largest

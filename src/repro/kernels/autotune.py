@@ -157,3 +157,64 @@ def best_block_sizes(kernel, shape: Mapping[str, int],
         items = tuple(sorted(shape.items()))
         return dict(_best_cached(km.name, items, model, stamp))
     return rank_block_sizes(km, shape, model)[0][1]
+
+
+# ---------------------------------------------------------------------------
+# Workload-level tuning — a WorkloadSpec names the step, this derives the
+# per-kernel problem shapes
+# ---------------------------------------------------------------------------
+
+
+def workload_kernel_shapes(cfg, workload, *, dp: int = 1, tp: int = 1,
+                           microbatches: int = 1
+                           ) -> Dict[str, Dict[str, object]]:
+    """The dominant kernels' concrete *per-device* problem shapes for one
+    step of ``cfg`` under ``workload`` (a ``repro.core.workload``
+    ``WorkloadLike``), sharded ``dp`` × ``tp`` ways with ``microbatches``
+    grad-accumulation chunks.
+
+    Decode steps tune only the per-token matmul (its cache-streaming
+    attention / recurrent update has no Pallas kernel here); train/prefill
+    add flash-attention and/or ssd_scan per the config family.
+    """
+    from repro.core import workload as wl
+    spec = wl.as_spec(workload)
+    bits = 16 if "16" in cfg.compute_dtype else 32
+    if spec.phase == "decode":
+        rows = spec.global_batch if spec.active_slots is None \
+            else spec.active_slots
+        tok = max((rows * spec.spec_len) // dp, 1)
+        b_dev = tok
+    else:
+        b_dev = max(spec.global_batch // (dp * max(microbatches, 1)), 1)
+        tok = b_dev * spec.seq_len
+
+    out: Dict[str, Dict[str, object]] = {}
+    if cfg.d_ff:
+        out["matmul"] = {"M": tok, "N": max(cfg.d_ff // tp, 1),
+                         "K": cfg.d_model, "bits": bits}
+    if cfg.n_heads and spec.phase != "decode":
+        out["flash_attention"] = {
+            "B": b_dev, "H": max(cfg.n_heads // tp, 1),
+            "KVH": max(cfg.n_kv_heads // tp, 1),
+            "Sq": spec.seq_len, "Skv": spec.seq_len,
+            "dh": cfg.head_dim_, "causal": True,
+            "window": cfg.sliding_window, "bits": bits}
+    if cfg.ssm is not None and spec.phase != "decode":
+        out["ssd_scan"] = {
+            "Bz": b_dev, "H": max(cfg.ssm_heads // tp, 1),
+            "L": spec.seq_len, "P": cfg.ssm.head_dim,
+            "N": cfg.ssm.d_state, "bits": bits}
+    return out
+
+
+def best_blocks_for_workload(cfg, workload, model=None, *, dp: int = 1,
+                             tp: int = 1, microbatches: int = 1
+                             ) -> Dict[str, Dict[str, int]]:
+    """Model-chosen block sizes for every dominant kernel of one step of
+    ``cfg`` under ``workload`` — ``workload_kernel_shapes`` fed through
+    ``best_block_sizes`` kernel by kernel."""
+    return {kern: best_block_sizes(kern, shape, model)
+            for kern, shape in workload_kernel_shapes(
+                cfg, workload, dp=dp, tp=tp,
+                microbatches=microbatches).items()}

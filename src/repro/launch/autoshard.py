@@ -33,6 +33,7 @@ import numpy as np
 from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
 from repro.configs.registry import ARCHS
 from repro.core import planspace, predictor
+from repro.core import workload as wl
 from repro.distributed.plan import Plan, plan_for
 
 #: a ranked search result: (predicted seconds, plan, mesh shape); with
@@ -41,10 +42,11 @@ Ranked = Tuple[float, Plan, Dict[str, int]]
 RankedTuned = Tuple[float, Plan, Dict[str, int], Dict[str, Dict[str, int]]]
 
 
-def candidate_plans(cfg, shape: ShapeConfig, multi_pod: bool = False
+def candidate_plans(cfg, workload: wl.WorkloadLike, multi_pod: bool = False
                     ) -> List[Plan]:
     """The search space: fsdp × sequence-parallel × microbatches × remat ×
     compression × (EP for MoE) × cache-seq sharding (decode)."""
+    shape = wl.as_spec(workload)
     dp = ("pod", "data") if multi_pod else ("data",)
     base = plan_for(cfg, shape, multi_pod=multi_pod)
     out = []
@@ -71,13 +73,14 @@ def candidate_plans(cfg, shape: ShapeConfig, multi_pod: bool = False
     return out
 
 
-def candidate_meshes(shape: ShapeConfig, *, multi_pod: bool = False,
+def candidate_meshes(workload: wl.WorkloadLike, *, multi_pod: bool = False,
                      n_devices: Optional[int] = None
                      ) -> List[Dict[str, int]]:
     """The mesh side of the space.  Default: the fixed 16×16 pod (2×16×16
     multi-pod).  With ``n_devices``: every (data × model) factorization,
     minus train meshes whose data axis doesn't divide the global batch
     (training keeps exact batch semantics)."""
+    shape = wl.as_spec(workload)
     if n_devices is None:
         return [{"pod": 2, "data": 16, "model": 16} if multi_pod
                 else {"data": 16, "model": 16}]
@@ -124,22 +127,23 @@ def search(arch: str, shape_name: str, *, multi_pod: bool = False,
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         raise ValueError(why)
+    spec = wl.from_shape(shape)  # one workload currency from here down
     # keep the unresolved form for co-tuning: autotune's block-choice memo
     # keys on registry names / None, not on resolved model objects
     raw_model = model
     model = predictor.resolve_model(model)  # resolve once for the sweep
     if meshes is None:
-        meshes = candidate_meshes(shape, multi_pod=multi_pod,
+        meshes = candidate_meshes(spec, multi_pod=multi_pod,
                                   n_devices=n_devices)
-    plans = candidate_plans(cfg, shape, multi_pod)
+    plans = candidate_plans(cfg, spec, multi_pod)
 
     if stream_chunk_cells is not None:
         ranked = planspace.stream_topk(
-            cfg, shape, plans, meshes, model, k=top_k,
+            cfg, spec, plans, meshes, model, k=top_k,
             chunk_cells=stream_chunk_cells,
             hbm_budget=predictor.HBM_BYTES)
     else:
-        space = planspace.PlanSpace.from_product(cfg, shape, plans, meshes)
+        space = planspace.PlanSpace.from_product(cfg, spec, plans, meshes)
         fits = space.feasible_mask()
         if fits.any():
             space = space.subset(fits)
@@ -149,7 +153,7 @@ def search(arch: str, shape_name: str, *, multi_pod: bool = False,
         ranked = space.rank(model, top_k=top_k)
     if tune_kernels:
         return [(s, p, m,
-                 planspace.cotune_kernel_blocks(cfg, shape, p, m,
+                 planspace.cotune_kernel_blocks(cfg, spec, p, m,
                                                 raw_model))
                 for s, p, m in ranked]
     return ranked

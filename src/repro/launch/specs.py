@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import workload as wl
 from repro.distributed.plan import Plan
 from repro.distributed.sharding import ShardingCtx, is_axes_leaf
 from repro.models import transformer
@@ -79,59 +80,60 @@ def _scalar(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
-# Per-kind assembly
+# Per-phase assembly — one helper, three thin wrappers
 # ---------------------------------------------------------------------------
 
 
-def train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
-    """-> (step_fn, arg_specs tuple, in_shardings tuple, out_shardings).
+def phase_cell(cfg: ArchConfig, workload: wl.WorkloadLike, mesh: Mesh,
+               plan: Plan):
+    """-> (step_fn, arg_specs tuple, in_shardings tuple, out_shardings)
+    for any workload phase.
 
-    ``out_shardings`` pins the NEW TrainState to the input layout: without
-    it GSPMD may materialize replicated f32 gradients (all-reduce + slice)
-    instead of reduce-scattering into the sharded parameter layout
-    (observed: 8–12 GB per-layer ARs on the 405B lowering — §Perf iter B).
+    The parameter shapes/axes/shardings plumbing is identical across
+    phases and computed once here; the phase then decides what travels
+    next to the params — the optimizer-carrying ``TrainState`` (train),
+    a token batch (prefill), or the decode caches + sampled-token inputs
+    (decode).
+
+    For train cells ``out_shardings`` pins the NEW TrainState to the input
+    layout: without it GSPMD may materialize replicated f32 gradients
+    (all-reduce + slice) instead of reduce-scattering into the sharded
+    parameter layout (observed: 8–12 GB per-layer ARs on the 405B lowering
+    — §Perf iter B).
     """
-    optimizer = opt.get_optimizer(cfg.optimizer)
-    step_fn = steps.make_train_step(cfg, optimizer, plan)
-
-    p_shapes = transformer.param_shapes(cfg)
-    p_axes = transformer.param_axes(cfg)
-    o_shapes = jax.eval_shape(optimizer.init, p_shapes)
-    o_axes = opt.opt_state_axes(cfg.optimizer, p_axes)
-
-    state_specs = steps.TrainState(
-        params=p_shapes, opt_state=o_shapes,
-        step=_sds((), jnp.int32))
-    state_sh = steps.TrainState(
-        params=_tree_shardings(mesh, plan, p_axes, p_shapes, "param"),
-        opt_state=_tree_shardings(mesh, plan, o_axes, o_shapes, "param"),
-        step=_scalar(mesh))
-
-    b_specs = batch_specs(cfg, shape.global_batch, shape.seq_len)
-    b_sh = _tree_shardings(mesh, plan, batch_axes(cfg), b_specs, "act")
-    metrics_sh = {"loss": _scalar(mesh), "grad_norm": _scalar(mesh),
-                  "lr": _scalar(mesh)}
-    return (step_fn, (state_specs, b_specs), (state_sh, b_sh),
-            (state_sh, metrics_sh))
-
-
-def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
-    step_fn = steps.make_prefill_step(cfg, plan)
-    p_shapes = transformer.param_shapes(cfg)
-    p_axes = transformer.param_axes(cfg)
-    p_sh = _tree_shardings(mesh, plan, p_axes, p_shapes, "param")
-    b_specs = batch_specs(cfg, shape.global_batch, shape.seq_len)
-    b_sh = _tree_shardings(mesh, plan, batch_axes(cfg), b_specs, "act")
-    return step_fn, (p_shapes, b_specs), (p_sh, b_sh), None
-
-
-def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
-    step_fn = steps.make_serve_step(cfg, plan, sample=True)
-    B, S = shape.global_batch, shape.seq_len
+    spec = wl.as_spec(workload)
+    B, S = spec.global_batch, spec.seq_len
     p_shapes = transformer.param_shapes(cfg)
     p_axes = transformer.param_axes(cfg)
     p_sh = _tree_shardings(mesh, plan, p_axes, p_shapes, "param")
 
+    if spec.phase == "train":
+        optimizer = opt.get_optimizer(cfg.optimizer)
+        step_fn = steps.make_step(cfg, spec, plan, optimizer=optimizer)
+        o_shapes = jax.eval_shape(optimizer.init, p_shapes)
+        o_axes = opt.opt_state_axes(cfg.optimizer, p_axes)
+        state_specs = steps.TrainState(
+            params=p_shapes, opt_state=o_shapes,
+            step=_sds((), jnp.int32))
+        state_sh = steps.TrainState(
+            params=p_sh,
+            opt_state=_tree_shardings(mesh, plan, o_axes, o_shapes,
+                                      "param"),
+            step=_scalar(mesh))
+        b_specs = batch_specs(cfg, B, S)
+        b_sh = _tree_shardings(mesh, plan, batch_axes(cfg), b_specs, "act")
+        metrics_sh = {"loss": _scalar(mesh), "grad_norm": _scalar(mesh),
+                      "lr": _scalar(mesh)}
+        return (step_fn, (state_specs, b_specs), (state_sh, b_sh),
+                (state_sh, metrics_sh))
+
+    if spec.phase == "prefill":
+        step_fn = steps.make_step(cfg, spec, plan)
+        b_specs = batch_specs(cfg, B, S)
+        b_sh = _tree_shardings(mesh, plan, batch_axes(cfg), b_specs, "act")
+        return step_fn, (p_shapes, b_specs), (p_sh, b_sh), None
+
+    step_fn = steps.make_step(cfg, spec, plan, sample=True)
     s_shapes = jax.eval_shape(
         lambda: transformer.init_decode_state(cfg, B, S))
     s_axes = transformer.decode_state_axes(cfg)
@@ -149,10 +151,21 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, plan: Plan):
             None)  # outputs inferred (next-token rank varies per family)
 
 
-def step_and_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+def train_cell(cfg: ArchConfig, shape, mesh: Mesh, plan: Plan):
+    return phase_cell(cfg, wl.as_spec(shape).with_(phase="train"), mesh,
+                      plan)
+
+
+def prefill_cell(cfg: ArchConfig, shape, mesh: Mesh, plan: Plan):
+    return phase_cell(cfg, wl.as_spec(shape).with_(phase="prefill"), mesh,
+                      plan)
+
+
+def decode_cell(cfg: ArchConfig, shape, mesh: Mesh, plan: Plan):
+    return phase_cell(cfg, wl.as_spec(shape).with_(phase="decode"), mesh,
+                      plan)
+
+
+def step_and_specs(cfg: ArchConfig, workload: wl.WorkloadLike, mesh: Mesh,
                    plan: Plan):
-    if shape.kind == "train":
-        return train_cell(cfg, shape, mesh, plan)
-    if shape.kind == "prefill":
-        return prefill_cell(cfg, shape, mesh, plan)
-    return decode_cell(cfg, shape, mesh, plan)
+    return phase_cell(cfg, workload, mesh, plan)

@@ -118,6 +118,23 @@ def make_serve_step(cfg: ArchConfig, plan: Optional[Plan] = None,
     return serve_step
 
 
+def make_step(cfg: ArchConfig, workload, plan: Optional[Plan] = None,
+              optimizer: Optional[opt.Optimizer] = None, **kw):
+    """One entry point for any workload phase: the ``WorkloadSpec`` (or a
+    ``ShapeConfig`` / deprecated phase string — ``repro.core.workload``
+    normalizes) picks the step family; extra keywords pass through to the
+    underlying ``make_*_step``.  ``optimizer`` defaults to the config's for
+    train workloads."""
+    from repro.core import workload as wl
+    spec = wl.as_spec(workload)
+    if spec.phase == "train":
+        optimizer = optimizer or opt.get_optimizer(cfg.optimizer)
+        return make_train_step(cfg, optimizer, plan, **kw)
+    if spec.phase == "prefill":
+        return make_prefill_step(cfg, plan, **kw)
+    return make_serve_step(cfg, plan, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Manual-DP train step (shard_map) — explicit collective control
 # ---------------------------------------------------------------------------

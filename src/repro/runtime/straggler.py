@@ -51,10 +51,14 @@ class StragglerMonitor:
             self._state = np.full(self.n_hosts, self.predicted_step_s)
 
     @classmethod
-    def from_model(cls, cfg, shape, plan, mesh_shape, n_hosts: int,
+    def from_model(cls, cfg, workload, plan, mesh_shape, n_hosts: int,
                    model=None, **kw) -> "StragglerMonitor":
         """Build a monitor whose threshold is anchored to the cost model's
-        predicted step time for (cfg × shape × plan × mesh).
+        predicted step time for (cfg × workload × plan × mesh).
+
+        ``workload`` is any ``repro.core.workload.WorkloadLike`` — a
+        ``WorkloadSpec``, a ``ShapeConfig``, or the deprecated phase
+        string (``predict_plans`` normalizes).
 
         ``model`` is anything ``predictor.resolve_model`` accepts: None (the
         analytic v5e seed), a registry device name, or a ``LinearCostModel``.
@@ -68,7 +72,7 @@ class StragglerMonitor:
         recomputes only the basis columns the delta touches.
         """
         from repro.core import predictor  # runtime sits above core
-        secs = predictor.predict_plans(cfg, shape, [plan], mesh_shape,
+        secs = predictor.predict_plans(cfg, workload, [plan], mesh_shape,
                                        model, cache=_BASIS_CACHE)
         return cls(n_hosts=n_hosts, predicted_step_s=float(secs[0]), **kw)
 

@@ -86,10 +86,13 @@ class Trainer:
         if self.calibrator is not None:
             # the live step's property vector: this trainer runs the whole
             # batch on the local substrate, so the pv is the single-device
-            # cell of (cfg × the ACTUAL data shape × the jitted plan)
+            # cell of (cfg × the ACTUAL data workload × the jitted plan)
             from repro.core import predictor
-            live = ShapeConfig("train_live", data_cfg.seq_len,
-                               data_cfg.global_batch, "train")
+            from repro.core.workload import WorkloadSpec
+            live = WorkloadSpec(phase="train",
+                                global_batch=data_cfg.global_batch,
+                                seq_len=data_cfg.seq_len,
+                                name="train_live")
             self._step_pv = predictor.plan_property_vector(
                 cfg, live, plan, {"data": 1})
 
@@ -131,7 +134,7 @@ class Trainer:
             self.monitor.observe(step, [dt])
             if self.calibrator is not None:
                 ev = self.calibrator.observe(self._step_pv, dt, step=step,
-                                             tag="train")
+                                             tag="train", phase="train")
                 if ev is not None:
                     # refit already happened inside observe(); re-anchor the
                     # straggler threshold to the refit model's prediction

@@ -15,6 +15,7 @@ import pytest
 
 from repro.core import kernelmodel
 from repro.core import properties as props
+from repro.core.workload import WorkloadSpec
 from repro.core.symcount import (
     CeilDiv, Const, Expr, FloorDiv, Max, Min, Piecewise, Var, as_expr,
     compile_vector, evaluate_vector,
@@ -239,7 +240,8 @@ def test_step_kernel_vectors_track_archcount_mxu():
         cfg = ARCHS[arch]
         bits = 16 if "16" in cfg.compute_dtype else 32
         total = add_vectors(
-            *kernelmodel.step_kernel_vectors(cfg, "prefill").values())
+            *kernelmodel.step_kernel_vectors(
+                cfg, WorkloadSpec(phase="prefill")).values())
         kern = evaluate_vector(total, env)[props.mxu_key(bits)]
         step = archcount.forward_counts(cfg)[props.mxu_key(bits)].eval(env)
         assert kern == pytest.approx(step, rel=0.05), (arch, kern, step)

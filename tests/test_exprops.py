@@ -240,8 +240,9 @@ def test_fused_scores_match_columns_and_loop(sweep_cell):
 
 def test_fused_step_program_matches_compiled_vector(sweep_cell):
     cfg, shape, plans, _ = sweep_cell
-    prog = predictor.step_program(cfg, "train", "full")
-    cv = predictor.step_vector_fn(cfg, "train", "full")
+    from repro.core.workload import WorkloadSpec
+    prog = predictor.step_program(cfg, WorkloadSpec(phase="train"), "full")
+    cv = predictor.step_vector_fn(cfg, WorkloadSpec(phase="train"), "full")
     env = {"B": shape.global_batch, "S": shape.seq_len,
            "M": np.asarray([1, 2, 4, 8], dtype=np.int64)}
     model = predictor.resolve_model(None)

@@ -201,7 +201,8 @@ def test_archcount_mxu_matches_jaxpr_extraction(arch):
 def test_archcount_train_flops_scale():
     from repro.configs.registry import ARCHS
     cfg = ARCHS["glm4-9b"]
-    sc = archcount.counts_for(cfg, "train")
+    from repro.core.workload import WorkloadSpec
+    sc = archcount.counts_for(cfg, WorkloadSpec(phase="train"))
     mf = sc.concrete_model_flops({"B": 256, "S": 4096})
     # 6·N·D with N≈9.4B, D≈1.05M tokens
     assert 0.8 < mf / (6 * cfg.n_params() * 256 * 4096) < 1.05

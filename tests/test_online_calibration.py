@@ -195,7 +195,7 @@ def test_sink_json_roundtrip(tmp_path):
     assert [s.seq for s in back.samples()] == [s.seq for s in sink.samples()]
     with open(path) as f:
         d = json.load(f)
-    assert d["kind"] == "telemetry" and d["schema"] == 1
+    assert d["kind"] == "telemetry" and d["schema"] == 2
     with pytest.raises(ValueError, match="not a telemetry record"):
         TelemetrySink.from_json_dict({"kind": "nope"})
 

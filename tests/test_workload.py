@@ -1,0 +1,429 @@
+"""WorkloadSpec tests: the one workload currency across predictor,
+planspace, autotuner, trainer and server.
+
+Four pillars:
+  * golden pins — ``WorkloadSpec(phase="train")`` predictions are
+    bit-identical (rtol 1e-12) to the pre-refactor outputs captured in
+    ``tests/golden/workload_train.json`` for every registry arch;
+  * phase physics — decode compute follows tokens-not-sequence, cache
+    reads scale linearly in context (``CT``), speculative length (``SL``)
+    multiplies throughput, prefill writes the KV cache;
+  * deprecation — bare ``kind=`` strings still work but warn;
+  * the payoff — model-guided admission beats FIFO under the model's own
+    physics (``runtime/server.py``), and phase-tagged telemetry keeps
+    refit windows pure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.registry import ARCHS
+from repro.core import archcount, planspace, predictor
+from repro.core import properties as props
+from repro.core import workload as wl
+from repro.core.workload import WorkloadSpec
+from repro.launch.autoshard import candidate_plans
+from repro.distributed.plan import plan_for
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "workload_train.json")
+MESH = {"data": 16, "model": 16}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# spec basics
+# ---------------------------------------------------------------------------
+
+
+def test_spec_phase_validation_and_kind_alias():
+    s = WorkloadSpec(phase="decode", global_batch=8, seq_len=512)
+    assert s.kind == "decode" and s.tokens == 8 * 512
+    with pytest.raises(ValueError, match="unknown phase"):
+        WorkloadSpec(phase="serve")
+    with pytest.raises(TypeError):
+        wl.as_spec(42)
+
+
+def test_structure_flags_only_when_refined():
+    assert WorkloadSpec(phase="decode").structure() == ("decode",)
+    assert WorkloadSpec(phase="train", spec_len=3).structure() == ("train",)
+    s = WorkloadSpec(phase="decode", cache_tokens=0.0, active_slots=0,
+                     spec_len=2, moe_imbalance=1.5)
+    assert s.structure() == ("decode", "ct", "as", "sl", "mi")
+    # the unrefined structure keys the PRE-spec disk cache entries
+    assert predictor._structure_key(wl.TRAIN_4K) == "train"
+    assert predictor._structure_key(s) == ("decode", "ct", "as", "sl", "mi")
+
+
+def test_env_defaults_fill_neutral_values():
+    cfg = ARCHS["glm4-9b"]
+    s = WorkloadSpec(phase="decode", global_batch=4, seq_len=1024)
+    e = s.env(cfg)
+    ctx = min(1024, cfg.sliding_window) if cfg.sliding_window else 1024
+    assert e["AS"] == 4 and e["CT"] == 4 * ctx
+    assert e["SL"] == 1 and e["MI"] == 1.0
+    assert WorkloadSpec(phase="train", global_batch=2).env() == \
+        {"B": 2, "S": 1, "M": 1}
+
+
+def test_as_spec_shapeconfig_is_silent_string_warns():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s = wl.as_spec(SHAPES["prefill_32k"])
+    assert s.phase == "prefill" and s.name == "prefill_32k"
+    with pytest.warns(DeprecationWarning, match="kind='decode' strings"):
+        assert wl.as_spec("decode").phase == "decode"
+
+
+# ---------------------------------------------------------------------------
+# golden pins: spec-routed train predictions are bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_golden_predict_step_bit_identical(golden):
+    for arch, g in golden.items():
+        cfg = ARCHS[arch]
+        plan = plan_for(cfg, wl.TRAIN_4K)
+        pred = predictor.predict_step(cfg, wl.TRAIN_4K, plan, MESH)
+        np.testing.assert_allclose(pred.seconds, g["predict_step_seconds"],
+                                   rtol=1e-12, err_msg=arch)
+        for k, v in g["predict_step_terms"].items():
+            np.testing.assert_allclose(pred.terms[k], v, rtol=1e-12,
+                                       err_msg=f"{arch}:{k}")
+
+
+def test_golden_predict_plans_bit_identical(golden):
+    for arch, g in golden.items():
+        cfg = ARCHS[arch]
+        plans = candidate_plans(cfg, wl.TRAIN_4K)[:24]
+        assert len(plans) == g["n_plans"]
+        secs = predictor.predict_plans(cfg, wl.TRAIN_4K, plans, MESH)
+        np.testing.assert_allclose(secs, g["predict_plans"], rtol=1e-12,
+                                   err_msg=arch)
+
+
+def test_golden_planspace_scores_bit_identical(golden):
+    meshes = planspace.mesh_factorizations(64)
+    for arch, g in golden.items():
+        cfg = ARCHS[arch]
+        plans = candidate_plans(cfg, wl.TRAIN_4K)[:8]
+        space = planspace.PlanSpace.from_product(cfg, wl.TRAIN_4K, plans,
+                                                 meshes)
+        np.testing.assert_allclose(space.scores(None),
+                                   g["planspace_scores_64dev"],
+                                   rtol=1e-12, err_msg=arch)
+
+
+def test_spec_equals_shape_and_legacy_string_all_phases():
+    cfg = ARCHS["glm4-9b"]
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = SHAPES[shape_name]
+        plan = plan_for(cfg, shape)
+        via_shape = predictor.predict_step(cfg, shape, plan, MESH).seconds
+        via_spec = predictor.predict_step(cfg, wl.from_shape(shape), plan,
+                                          MESH).seconds
+        assert via_spec == via_shape
+        env = {"B": shape.global_batch, "S": shape.seq_len, "M": 1}
+        spec_cv = predictor.step_vector_fn(cfg, wl.from_shape(shape))
+        with pytest.warns(DeprecationWarning):
+            str_cv = predictor.step_vector_fn(cfg, shape.kind)
+        a, b = spec_cv(env), str_cv(env)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_allclose(float(a[k]), float(b[k]), rtol=0,
+                                       err_msg=f"{shape_name}:{k}")
+
+
+# ---------------------------------------------------------------------------
+# decode / prefill physics
+# ---------------------------------------------------------------------------
+
+
+def _mxu_key(cfg):
+    return props.mxu_key(16 if "16" in cfg.compute_dtype else 32)
+
+
+def test_decode_compute_counts_tokens_not_sequence():
+    """At fixed context load (CT pinned) decode mxu work is per-token: it
+    must not grow with the allocated cache capacity S."""
+    cfg = ARCHS["llama3.2-3b"]
+    spec = WorkloadSpec(phase="decode", global_batch=8, seq_len=1024,
+                        cache_tokens=8 * 1024.0)
+    cv = predictor.step_vector_fn(cfg, spec)
+    k = _mxu_key(cfg)
+    base = {"B": 8, "M": 1, "CT": 8 * 1024.0}
+    a = float(cv({**base, "S": 1024})[k])
+    b = float(cv({**base, "S": 65536})[k])
+    assert a == b > 0
+
+
+def test_decode_cache_read_bytes_linear_in_context():
+    cfg = ARCHS["llama3.2-3b"]
+    spec = WorkloadSpec(phase="decode", global_batch=8, seq_len=4096,
+                        cache_tokens=1.0)
+    cv = predictor.step_vector_fn(cfg, spec)
+    lk = props.mem_key("load", 16, "s1")
+    env = {"B": 8, "S": 4096, "M": 1}
+    l1 = float(cv({**env, "CT": 8 * 1024.0})[lk])
+    l2 = float(cv({**env, "CT": 16 * 1024.0})[lk])
+    l3 = float(cv({**env, "CT": 24 * 1024.0})[lk])
+    assert l2 - l1 == pytest.approx(l3 - l2, rel=1e-12)
+    assert l2 > l1   # more context = more cache bytes streamed
+
+
+def test_decode_speculative_length_multiplies_compute():
+    cfg = ARCHS["llama3.2-3b"]
+    base = WorkloadSpec(phase="decode", global_batch=8, seq_len=1024,
+                        cache_tokens=8 * 1024.0)
+    spec = base.with_(spec_len=2)
+    k = _mxu_key(cfg)
+    env = {"B": 8, "S": 1024, "M": 1, "CT": 8 * 1024.0}
+    m1 = float(predictor.step_vector_fn(cfg, base)(env)[k])
+    m2 = float(predictor.step_vector_fn(cfg, spec)({**env, "SL": 2})[k])
+    assert m2 == pytest.approx(2 * m1, rel=1e-12)
+
+
+def test_decode_default_spec_matches_neutral_refinements():
+    """A fully-refined program evaluated at the neutral point (every slot
+    occupied, full context, SL=1, MI=1) equals the default program."""
+    cfg = ARCHS["glm4-9b"]
+    shape = SHAPES["decode_32k"]
+    spec0 = wl.from_shape(shape)
+    spec1 = spec0.with_(active_slots=0, cache_tokens=0.0, spec_len=2,
+                        moe_imbalance=2.0)
+    env = spec0.env(cfg)
+    env["M"] = 1
+    cv0 = predictor.step_vector_fn(cfg, spec0)
+    cv1 = predictor.step_vector_fn(cfg, spec1)
+    a = cv0(env)
+    b = cv1({**env, "SL": 1, "MI": 1.0})
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_allclose(float(a[k]), float(b[k]), rtol=1e-9,
+                                   err_msg=k)
+
+
+def test_prefill_writes_kv_cache():
+    cfg = ARCHS["llama3.2-3b"]      # dense: cache = KV rows exactly
+    env = {"B": 4, "S": 2048, "M": 1}
+    from repro.core.symcount import as_expr
+    sk = props.mem_key("store", 16, "s1")
+    pf = as_expr(archcount.prefill_counts(cfg).pv[sk]).eval(env)
+    fwd = as_expr(archcount.forward_counts(cfg)[sk]).eval(env)
+    kv_rows = 4 * 2048 * 2 * cfg.n_kv_heads * cfg.head_dim_ * cfg.n_layers
+    assert pf - fwd == pytest.approx(kv_rows, rel=1e-12)
+
+
+def test_moe_imbalance_scales_decode_expert_compute_only():
+    cfg = ARCHS["mixtral-8x7b"]
+    base = WorkloadSpec(phase="decode", global_batch=8, seq_len=1024)
+    hot = base.with_(moe_imbalance=2.0)
+    k = _mxu_key(cfg)
+    env = base.env(cfg)
+    env["M"] = 1
+    m1 = float(predictor.step_vector_fn(cfg, base)(env)[k])
+    m2 = float(predictor.step_vector_fn(cfg, hot)({**env, "MI": 2.0})[k])
+    assert m1 < m2 < 2 * m1   # experts scale, attention/head do not
+    # train formulas never carry MI (GShard capacity padding)
+    t = WorkloadSpec(phase="train", moe_imbalance=2.0)
+    assert t.structure() == ("train",)
+
+
+# ---------------------------------------------------------------------------
+# the payoff: model-scored admission beats FIFO
+# ---------------------------------------------------------------------------
+
+
+def test_model_admission_beats_fifo_on_mixed_prompts():
+    from repro.runtime.server import AdmissionScorer, simulate_serving
+    cfg = ARCHS["glm4-9b"]
+    scorer = AdmissionScorer(cfg, slots=4, max_len=4096)
+    lens = [2048, 1024] + [16] * 8        # adversarial arrival for FIFO
+    m = simulate_serving(cfg, lens, 32, slots=4, max_len=4096,
+                         policy="model", scorer=scorer)
+    f = simulate_serving(cfg, lens, 32, slots=4, max_len=4096,
+                         policy="fifo", scorer=scorer)
+    assert m["n_done"] == f["n_done"] == len(lens)
+    assert m["mean_latency_s"] < f["mean_latency_s"]
+    # model policy defers the long prompts; FIFO admits them first
+    assert f["order"][:2] == [0, 1] and m["order"][-2:] == [1, 0]
+
+
+def test_admission_scorer_sweeps_occupancy_as_arrays():
+    from repro.runtime.server import AdmissionScorer
+    cfg = ARCHS["glm4-9b"]
+    sc = AdmissionScorer(cfg, slots=8, max_len=2048)
+    secs = sc.decode_step_seconds(np.arange(1, 9),
+                                  np.arange(1, 9) * 512.0)
+    assert secs.shape == (8,)
+    assert np.all(np.diff(secs) > 0)      # more occupancy = slower step
+    pf = sc.prefill_seconds([64, 512, 2048])
+    assert pf[0] < pf[1] < pf[2]
+
+
+def test_admission_print_line_and_slo_defer(capsys):
+    import jax
+    from repro.models import transformer
+    from repro.runtime.server import DecodeServer, Request
+    cfg = ARCHS["glm4-9b"].reduced()
+    params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    srv = DecodeServer(cfg, params, slots=2, max_len=64, seed=0,
+                       admission="model")
+    rng = np.random.default_rng(0)
+    for rid, plen in enumerate([12, 3]):
+        srv.submit(Request(rid=rid, prompt=rng.integers(
+            2, cfg.vocab_size, plen).astype(np.int32), max_new=2))
+    done = srv.run()
+    assert len(done) == 2
+    out = capsys.readouterr().out
+    # the short prompt admits first, each line carries the model scores
+    lines = [l for l in out.splitlines() if l.startswith("[admit]")]
+    assert len(lines) == 2 and "policy=model" in lines[0]
+    assert "rid=1" in lines[0] and "rid=0" in lines[1]
+    # an impossible decode SLO defers admission while slots are busy
+    srv2 = DecodeServer(cfg, params, slots=2, max_len=64, seed=0,
+                        admission="model", slo_decode_s=0.0)
+    srv2.submit(Request(rid=0, prompt=np.asarray([3, 4], np.int32),
+                        max_new=2))
+    srv2.submit(Request(rid=1, prompt=np.asarray([5, 6], np.int32),
+                        max_new=2))
+    srv2._refill()
+    assert srv2._n_active() == 1 and len(srv2.queue) == 1
+
+
+# ---------------------------------------------------------------------------
+# phase-tagged telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_pv_fingerprint_phase_sensitive():
+    from repro.calibration.telemetry import pv_fingerprint
+    pv = {"mxu:16": 1.0}
+    assert pv_fingerprint(pv) == pv_fingerprint(pv)
+    assert pv_fingerprint(pv, "train") != pv_fingerprint(pv, "decode")
+    assert pv_fingerprint(pv, "train") != pv_fingerprint(pv)
+
+
+def test_sink_phase_filter_and_schema1_migration():
+    from repro.calibration.telemetry import TelemetrySink, pv_fingerprint
+    sink = TelemetrySink()
+    sink.record({"x": 1.0}, 0.1, phase="train")
+    sink.record({"x": 1.0}, 0.2, phase="decode")
+    sink.record({"x": 1.0}, 0.3)           # default phase is train
+    assert [s.seconds for s in sink.samples(phase="train")] == [0.1, 0.3]
+    assert [s.seconds for s in sink.samples(phase="decode")] == [0.2]
+    assert sink.stats()["n_unique_pvs"] == 2    # phase keys the pv table
+    back = TelemetrySink.from_json_dict(sink.to_json_dict())
+    assert [s.phase for s in back.samples()] == ["train", "decode", "train"]
+    # schema-1 rows (no phase column) load as phase="train"
+    fp = pv_fingerprint({"x": 1.0})
+    legacy = {"schema": 1, "kind": "telemetry", "capacity": 8,
+              "n_recorded": 1, "n_dropped": 0, "pvs": {fp: {"x": 1.0}},
+              "samples": [[0, fp, 0.5, 7, "train"]]}
+    mig = TelemetrySink.from_json_dict(legacy)
+    s, = mig.samples()
+    assert s.phase == "train" and s.seconds == 0.5 and s.step == 7
+
+
+def test_phase_scoped_calibrator_ignores_other_phases():
+    from repro.calibration.online import OnlineCalibrator
+    cal = OnlineCalibrator(None, device="t", phase="train", warmup=0)
+    pv = {"mxu:16": 1e12, "const1": 1.0}
+    for i in range(8):
+        cal.observe(pv, 0.01, step=i, phase="train")
+    n = cal.rls.n_samples
+    cal.observe(pv, 5.0, step=9, phase="decode")   # wild outlier, off-phase
+    assert cal.rls.n_samples == n                  # never reached the fit
+    assert cal.drift.evidence == 0.0
+    assert len(cal.sink.samples(phase="decode")) == 1   # but was buffered
+
+
+def test_refit_window_filters_by_event_phase():
+    from repro.calibration.online import OnlineCalibrator
+    cal = OnlineCalibrator(None, device="t", warmup=2, min_refit_samples=2,
+                           drift=None)
+    cal.drift.slack, cal.drift.threshold = 0.05, 1.0
+    pv_t = {"mxu:16": 1e12, "const1": 1.0}
+    pv_d = {"load:16:s1": 1e9, "const1": 1.0}
+    for i in range(6):
+        cal.observe(pv_t, 0.01, step=i, phase="train")
+        cal.observe(pv_d, 0.002, step=i, phase="decode")
+    # drive a slowdown in the TRAIN stream only
+    ev = None
+    for i in range(6, 40):
+        ev = ev or cal.observe(pv_t, 0.05, step=i, phase="train")
+        cal.observe(pv_d, 0.002, step=i, phase="decode")
+    assert ev is not None and ev.phase == "train"
+    # the refit window must have been pure train rows
+    pvs, _ = cal.sink.window(since_seq=ev.onset_seq, phase="train")
+    assert all("mxu:16" in p for p in pvs)
+    assert cal.refits >= 1
+    assert cal.model.meta["refit_onset_seq"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# launch-layer plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_phase_cell_matches_legacy_wrappers():
+    import jax
+    from jax.sharding import Mesh
+    from repro.launch import specs
+    cfg = ARCHS["llama3.2-3b"].reduced()
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    plan = plan_for(cfg, SHAPES["train_4k"])
+    for wrapper, phase, n_args in ((specs.train_cell, "train", 2),
+                                   (specs.prefill_cell, "prefill", 2),
+                                   (specs.decode_cell, "decode", 4)):
+        fn, arg_specs, in_sh, out_sh = wrapper(
+            cfg, SHAPES["train_4k"], mesh, plan)
+        assert callable(fn) and len(arg_specs) == n_args
+        spec = wl.as_spec(SHAPES["train_4k"]).with_(phase=phase)
+        fn2, arg_specs2, in_sh2, _ = specs.phase_cell(cfg, spec, mesh, plan)
+        assert jax.tree.structure(arg_specs) == jax.tree.structure(arg_specs2)
+        assert jax.tree.structure(in_sh) == jax.tree.structure(in_sh2)
+
+
+def test_make_step_dispatches_on_phase():
+    from repro.runtime import steps
+    cfg = ARCHS["llama3.2-3b"].reduced()
+    assert steps.make_step(cfg, wl.TRAIN_4K).__name__ == "train_step"
+    assert steps.make_step(cfg, wl.PREFILL_32K).__name__ == "prefill_step"
+    assert steps.make_step(cfg, wl.DECODE_32K).__name__ == "serve_step"
+    with pytest.warns(DeprecationWarning):
+        assert steps.make_step(cfg, "decode").__name__ == "serve_step"
+
+
+def test_elastic_replan_accepts_spec():
+    from repro.distributed import elastic
+    cfg = ARCHS["glm4-9b"]
+    a = elastic.replan(cfg, SHAPES["train_4k"], 16)
+    b = elastic.replan(cfg, wl.TRAIN_4K, 16)
+    assert [o.predicted_step_s for o in a] == \
+        [o.predicted_step_s for o in b]
+    assert a and a[0].shape == b[0].shape
+
+
+def test_autotune_workload_kernel_shapes_decode_occupancy():
+    from repro.kernels import autotune
+    cfg = ARCHS["llama3.2-3b"]
+    full = WorkloadSpec(phase="decode", global_batch=16, seq_len=1024)
+    half = full.with_(active_slots=8)
+    sh_full = autotune.workload_kernel_shapes(cfg, full)
+    sh_half = autotune.workload_kernel_shapes(cfg, half)
+    assert "flash_attention" not in sh_full      # decode streams the cache
+    assert sh_full["matmul"]["M"] == 2 * sh_half["matmul"]["M"]
