@@ -6,6 +6,7 @@ scored through the fused decode/prefill basis programs and prints an
 
     PYTHONPATH=src python examples/serve_decode.py
 """
+import argparse
 import time
 
 import jax
@@ -21,6 +22,19 @@ from repro.runtime.server import DecodeServer, Request, simulate_serving
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-json", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the serve "
+                         "run (prefill/decode spans + predicted overlay)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="dump the metrics registry as JSON at exit")
+    args = ap.parse_args()
+
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    if args.trace_json:
+        obs_trace.enable(process_name="serve_decode")
+
     cfg = get_arch("glm4-9b").reduced()
     params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
     server = DecodeServer(cfg, params, slots=4, max_len=128, seed=0,
@@ -78,6 +92,16 @@ def main():
           f"{sim_m['mean_latency_s']*1e3:.2f} ms vs fifo "
           f"{sim_f['mean_latency_s']*1e3:.2f} ms "
           f"({sim_f['mean_latency_s']/max(sim_m['mean_latency_s'],1e-12):.2f}x)")
+
+    tracer = obs_trace.get_tracer()
+    if args.trace_json:
+        for line in tracer.report_lines():
+            print(f"[trace] {line}")
+        tracer.save(args.trace_json)
+        print(f"[example] trace written to {args.trace_json}")
+    if args.metrics_json:
+        obs_metrics.REGISTRY.save_json(args.metrics_json)
+        print(f"[example] metrics written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,17 @@ def main():
     ap.add_argument("--telemetry-json", default=None,
                     help="write the telemetry ring buffer to this JSON "
                          "file at exit (requires --online-calibrate)")
+    ap.add_argument("--trace-json", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(measured step spans + predicted overlay)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="dump the metrics registry as JSON at exit")
     args = ap.parse_args()
+
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    if args.trace_json:
+        obs_trace.enable(process_name="train_smollm")
 
     cfg = get_arch("smollm-360m") if args.full else hundred_m_config()
     print(f"[example] {cfg.name}: {cfg.n_params()/1e6:.1f}M params")
@@ -75,6 +85,16 @@ def main():
             trainer.calibrator.sink.save(args.telemetry_json)
             print(f"[calib] telemetry saved to {args.telemetry_json} "
                   f"({len(trainer.calibrator.sink)} samples buffered)")
+
+    tracer = obs_trace.get_tracer()
+    if args.trace_json:
+        for line in tracer.report_lines():
+            print(f"[trace] {line}")
+        tracer.save(args.trace_json)
+        print(f"[example] trace written to {args.trace_json}")
+    if args.metrics_json:
+        obs_metrics.REGISTRY.save_json(args.metrics_json)
+        print(f"[example] metrics written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

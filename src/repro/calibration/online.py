@@ -34,6 +34,18 @@ from repro.calibration import registry
 from repro.calibration.telemetry import TelemetrySink
 from repro.core import fit
 from repro.core.model import LinearCostModel, geomean
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+
+_CUSUM = _obs_metrics.REGISTRY.gauge(
+    "repro_drift_cusum_evidence",
+    "current CUSUM excursion height of the drift monitor (0 = quiet)")
+_DRIFT_EVENTS = _obs_metrics.REGISTRY.counter(
+    "repro_drift_events_total",
+    "drift alarms emitted by the CUSUM monitor, by direction and phase")
+_REFITS = _obs_metrics.REGISTRY.counter(
+    "repro_calibration_refits_total",
+    "model refits performed by online calibrators")
 
 
 @dataclass(frozen=True)
@@ -192,8 +204,13 @@ class OnlineCalibrator:
             return None
         ev = self.drift.observe(seq, (seconds - pred) / pred, step=step,
                                 phase=phase)
+        _CUSUM.set(self.drift.evidence)
         if ev is not None:
             self.events.append(ev)
+            _DRIFT_EVENTS.inc(1, direction=ev.direction, phase=ev.phase)
+            _obs_trace.get_tracer().instant(
+                "drift_event", seq=ev.seq, direction=ev.direction,
+                phase=ev.phase, magnitude=ev.magnitude)
             self._refit(ev)
         return ev
 
@@ -216,6 +233,7 @@ class OnlineCalibrator:
                                         delta=self.delta)
         state.observe_many(pvs, times)
         self.refits += 1
+        _REFITS.inc()
         meta = dict(self.model.meta)
         meta.update({"refit_epoch": self.refits,
                      "refit_samples": len(times),
@@ -258,6 +276,18 @@ class OnlineCalibrator:
                 f"drift={self.drift.status} cusum={self.drift.evidence:.2f} "
                 f"refits={self.refits} revision={self.revision}")
 
+    def residual_attribution(self, n: int = 64):
+        """Project the last ``n`` samples' measured-vs-predicted error onto
+        the model's property basis (``obs.explain.attribute_residual_pv``),
+        so a drift report can NAME the miss — "memory terms account for 78%
+        of it" — instead of just flagging it.  None when the window is
+        empty."""
+        from repro.obs.explain import attribute_residual_pv
+        pvs, times = self.sink.window(n=n, phase=self.phase)
+        if not times:
+            return None
+        return attribute_residual_pv(self.model, pvs, times)
+
     def final_report(self) -> str:
         """Multi-line refit report for end-of-run printing."""
         base_err = self.window_rel_err()
@@ -278,4 +308,8 @@ class OnlineCalibrator:
                          f"onset={ev.onset_seq} phase={ev.phase} "
                          f"direction={ev.direction} "
                          f"magnitude={ev.magnitude:+.3f}")
+        att = self.residual_attribution()
+        if att is not None and att.n_samples:
+            lines.append(f"residual attribution: {att.line()} "
+                         f"(n={att.n_samples})")
         return "\n".join(lines)

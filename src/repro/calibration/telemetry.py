@@ -16,9 +16,25 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import tempfile
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Mapping, Optional, Tuple
+
+from repro.obs import metrics as _obs_metrics
+
+_SAMPLES = _obs_metrics.REGISTRY.counter(
+    "repro_telemetry_samples_total",
+    "timing samples accepted into telemetry sinks, by phase")
+_DROPPED = _obs_metrics.REGISTRY.counter(
+    "repro_telemetry_dropped_total",
+    "non-positive timings rejected by telemetry sinks")
+_OCCUPANCY = _obs_metrics.REGISTRY.gauge(
+    "repro_telemetry_ring_occupancy",
+    "buffered samples in the most recently touched telemetry ring")
+_UNIQUE_PVS = _obs_metrics.REGISTRY.gauge(
+    "repro_telemetry_unique_pvs",
+    "distinct property vectors in the most recently touched sink's table")
 
 
 def pv_fingerprint(pv: Mapping[str, float], phase: str = "") -> str:
@@ -77,6 +93,7 @@ class TelemetrySink:
         fit."""
         if not seconds > 0:
             self.n_dropped += 1
+            _DROPPED.inc()
             return None
         fp = pv_fingerprint(pv, phase)
         if fp not in self._pvs:
@@ -93,6 +110,9 @@ class TelemetrySink:
             if self._refs[old.fingerprint] == 0:
                 del self._refs[old.fingerprint]
                 del self._pvs[old.fingerprint]
+        _SAMPLES.inc(1, phase=phase)
+        _OCCUPANCY.set(len(self._buf))
+        _UNIQUE_PVS.set(len(self._pvs))
         return seq
 
     def pv(self, fingerprint: str) -> Dict[str, float]:
@@ -150,11 +170,22 @@ class TelemetrySink:
         }
 
     def save(self, path: str) -> None:
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(self.to_json_dict(), f, indent=1)
+        """Atomic write (temp file + ``os.replace``): a crash or kill mid-
+        save leaves the previous artifact intact instead of a truncated
+        JSON the next ``load`` would choke on."""
+        d = os.path.dirname(path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_json_dict(), f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def from_json_dict(cls, d: Mapping[str, object]) -> "TelemetrySink":

@@ -66,6 +66,20 @@ from repro.core.symcount import (
     Add, CeilDiv, Const, Expr, ExprLike, FloorDiv, Max, Min, Mul, Piecewise,
     Pow, Var, as_expr,
 )
+from repro.obs import metrics as _obs_metrics
+
+# registry-side telemetry (repro.obs.metrics is dependency-free, so this
+# import can never cycle): BasisCache column probes and the disk compile
+# cache both publish here, alongside their instance/module views.
+_BASIS_HITS = _obs_metrics.REGISTRY.counter(
+    "repro_basis_cache_hits_total",
+    "BasisCache column probes served from cache")
+_BASIS_MISSES = _obs_metrics.REGISTRY.counter(
+    "repro_basis_cache_misses_total",
+    "BasisCache column probes that recomputed the column")
+_BASIS_INVALIDATIONS = _obs_metrics.REGISTRY.counter(
+    "repro_basis_cache_invalidations_total",
+    "BasisCache.clear() epochs (drift refits, explicit resets)")
 
 #: bump when the canonical form, codegen, or serialization layout changes —
 #: part of every disk-cache key, so stale programs can never load.
@@ -532,6 +546,16 @@ class BasisProgram:
             self._term_fns[i] = fn
         return fn
 
+    def explain(self, env: Mapping[str, object], model, *,
+                scale: float = 1.0, source: str = "step"):
+        """Per-term attribution of ``scale · score(env, model)``: a list of
+        (term repr, seconds, category, fed property keys) rows — the folded
+        constant appears as term ``"1"`` — whose seconds sum exactly to the
+        fused GEMV score.  Delegates to ``repro.obs.explain`` (imported
+        lazily; ``obs.explain`` sits above core)."""
+        from repro.obs.explain import explain_program
+        return explain_program(self, env, model, scale=scale, source=source)
+
     # -- serialization (the on-disk compile cache) -------------------------
     def to_json_dict(self) -> Dict[str, object]:
         return {
@@ -640,6 +664,7 @@ class BasisCache:
         rather than an argument about key structure."""
         self._lru = LRUCache(maxsize=self._lru.maxsize)
         self.invalidations += 1
+        _BASIS_INVALIDATIONS.inc()
 
 
 def _fingerprint(var_names: Tuple[str, ...], scalars: tuple,
@@ -697,7 +722,8 @@ def _score_cells_cached(program: BasisProgram, env: Mapping[str, object],
     groups: Dict[Tuple[str, ...], List[int]] = {}
     for i in np.nonzero(w_terms)[0]:
         groups.setdefault(program.term_params[int(i)], []).append(int(i))
-    for var_names, term_ids in groups.items():
+    hits = misses = 0     # batched per call: the registry lock stays off
+    for var_names, term_ids in groups.items():  # the per-column hot loop
         arr_vars = [v for v in var_names if _is_array(env[v])]
         scalars = tuple((v, env[v]) for v in var_names if v not in arr_vars)
         if arr_vars:
@@ -717,14 +743,20 @@ def _score_cells_cached(program: BasisProgram, env: Mapping[str, object],
                     fn(np, *(uenv[v] for v in program.term_params[i])),
                     dtype=np.float64)
                 cache._lru[ckey] = col
-                cache.misses += 1
+                misses += 1
             else:
-                cache.hits += 1
+                hits += 1
             if inv is None:
                 total += w_terms[i] * float(np.asarray(col))
             else:
                 expanded = np.broadcast_to(col, (len(rows[0]),))[inv]
                 total += w_terms[i] * expanded
+    cache.hits += hits
+    cache.misses += misses
+    if hits:
+        _BASIS_HITS.inc(hits)
+    if misses:
+        _BASIS_MISSES.inc(misses)
     return total
 
 
@@ -732,9 +764,53 @@ def _score_cells_cached(program: BasisProgram, env: Mapping[str, object],
 # Persistent on-disk compile cache
 # ---------------------------------------------------------------------------
 
+class _RegistryStats:
+    """Dict-like facade over a labeled registry counter, so the existing
+    ``DISK_STATS["hits"] += 1`` call sites (and test resets via
+    ``DISK_STATS[k] = 0``) keep working while the metrics registry is the
+    single store.  Assigning below the current value resets the counter
+    family (test isolation) rather than decrementing."""
+
+    __slots__ = ("_counter", "_label", "_fields")
+
+    def __init__(self, counter, label: str, fields: Tuple[str, ...]):
+        self._counter = counter
+        self._label = label
+        self._fields = fields
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._fields:
+            raise KeyError(key)
+        return int(self._counter.value(**{self._label: key}))
+
+    def __setitem__(self, key: str, value: int) -> None:
+        delta = int(value) - self[key]
+        if delta >= 0:
+            if delta:
+                self._counter.inc(delta, **{self._label: key})
+        else:       # a rewind is a reset (tests zeroing between cases)
+            self._counter._bump(
+                _obs_metrics._labelset({self._label: key}),
+                int(value), absolute=True)
+
+    def __iter__(self):
+        return iter(self._fields)
+
+    def items(self):
+        return [(k, self[k]) for k in self._fields]
+
+    def __repr__(self) -> str:
+        return repr(dict(self.items()))
+
+
 #: process-wide disk-cache telemetry (reported by the autoshard CLI; the CI
-#: compile-cache smoke step asserts a warm second invocation)
-DISK_STATS = {"hits": 0, "misses": 0, "errors": 0}
+#: compile-cache smoke step asserts a warm second invocation).  Backed by
+#: ``repro_compile_cache_events_total{event=…}`` in the metrics registry.
+DISK_STATS = _RegistryStats(
+    _obs_metrics.REGISTRY.counter(
+        "repro_compile_cache_events_total",
+        "persistent compile-cache outcomes, by event (hits/misses/errors)"),
+    "event", ("hits", "misses", "errors"))
 
 
 def compile_cache_dir() -> Optional[str]:

@@ -13,7 +13,13 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Generic, Hashable, Optional, TypeVar
 
+from repro.obs import metrics as _obs_metrics
+
 V = TypeVar("V")
+
+_EVICTIONS = _obs_metrics.REGISTRY.counter(
+    "repro_lru_evictions_total",
+    "entries dropped from bounded LRU caches on capacity overflow")
 
 
 class LRUCache(Generic[V]):
@@ -38,6 +44,7 @@ class LRUCache(Generic[V]):
         self._data[key] = value
         while len(self._data) > self.maxsize:
             self._data.popitem(last=False)
+            _EVICTIONS.inc()
 
     def __contains__(self, key: Hashable) -> bool:
         return key in self._data

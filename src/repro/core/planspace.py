@@ -45,6 +45,7 @@ from repro.core import properties as props
 from repro.core import workload as wl
 from repro.core.lru import LRUCache
 from repro.core.workload import WorkloadSpec
+from repro.obs import trace as _obs_trace
 
 Mesh = Dict[str, int]
 Cell = Tuple[object, Mapping[str, int]]  # (Plan, mesh_shape)
@@ -468,6 +469,15 @@ class PlanSpace:
         ``exprops.BasisCache``) switches to incremental per-column
         evaluation for warm rescores.  ``scores_columns`` is the per-key
         column path this is pinned against (rtol ≤ 1e-9)."""
+        tr = _obs_trace.get_tracer()
+        if tr.enabled:      # one span per sweep; off = one attribute check
+            with tr.span("planspace.scores", cells=len(self),
+                         phase=self.workload.phase,
+                         cached=cache is not None):
+                return self._scores(model, cache)
+        return self._scores(model, cache)
+
+    def _scores(self, model=None, cache=None) -> np.ndarray:
         m = predictor.resolve_model(model)
         n = len(self)
         base_env = self.workload.env(self.cfg)

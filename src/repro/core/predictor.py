@@ -270,16 +270,9 @@ def predict_step(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
 
     bd = weights.breakdown(pv)
     total = sum(bd.values())
-    terms = {"compute": 0.0, "memory": 0.0, "collective": 0.0, "other": 0.0}
+    terms = {c: 0.0 for c in props.CATEGORIES}
     for k, v in bd.items():
-        if k.startswith(("mxu", "flop")):
-            terms["compute"] += v
-        elif k.startswith(("load", "store", "local", "minls")):
-            terms["memory"] += v
-        elif k.startswith("coll"):
-            terms["collective"] += v
-        else:
-            terms["other"] += v
+        terms[props.category(k)] += v
     if residual is not None:
         corrected = total * residual.correction(pv)
         terms["residual"] = corrected - total
@@ -288,6 +281,18 @@ def predict_step(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
     mfu = mf / (n_dev * PEAK_FLOPS_BF16 * total) if total > 0 else 0.0
     return StepPrediction(seconds=total, breakdown=bd, terms=terms,
                           model_flops=mf, mfu=mfu)
+
+
+def score_explain(cfg: ArchConfig, workload: wl.WorkloadLike, plan,
+                  mesh_shape: Mapping[str, int], weights: ModelLike = None):
+    """Decompose one cell's predicted step seconds into basis-term
+    contributions — per term, per cost category, per program source (step
+    / collective / launch) — summing exactly to the fused
+    ``PlanSpace.scores`` cell.  Returns an ``obs.explain.Explanation``
+    (lazy import; ``obs.explain`` sits above core)."""
+    from repro.obs.explain import score_explain as _score_explain
+    return _score_explain(cfg, workload, plan, mesh_shape,
+                          model=resolve_model(weights))
 
 
 def predict_plans(cfg: ArchConfig, workload: wl.WorkloadLike,

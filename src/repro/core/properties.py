@@ -147,6 +147,24 @@ def to_matrix(vectors: List[Mapping[str, float]], keys: List[str]):
     return A
 
 
+#: the coarse attribution buckets reports aggregate properties into
+CATEGORIES = ("compute", "memory", "collective", "other")
+
+
+def category(key: str) -> str:
+    """Coarse cost category of a property key — the shared classification
+    ``predictor.predict_step`` terms, ``obs.explain`` groupings, and the
+    drift-attribution lines all use (one mapping, not three)."""
+    head = key.split(":", 1)[0]
+    if head in ("mxu", "flop"):
+        return "compute"
+    if head in ("load", "store", "local", "minls"):
+        return "memory"
+    if head == "coll":
+        return "collective"
+    return "other"
+
+
 # Human-readable names for reports (Table-2 analog)
 PRETTY = {
     "s0": "uniform (stride-0)",

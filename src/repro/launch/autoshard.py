@@ -35,6 +35,9 @@ from repro.configs.registry import ARCHS
 from repro.core import planspace, predictor
 from repro.core import workload as wl
 from repro.distributed.plan import Plan, plan_for
+from repro.obs import metrics as _obs_metrics
+from repro.obs import report as _obs_report
+from repro.obs import trace as _obs_trace
 
 #: a ranked search result: (predicted seconds, plan, mesh shape); with
 #: ``tune_kernels`` a fourth element carries {kernel: block sizes}
@@ -177,7 +180,19 @@ def main() -> None:
                     help="cost-model registry device name (default: the "
                          "analytic tpu-v5e seed); see python -m "
                          "repro.calibration --list")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the sweep "
+                         "(measured spans + predicted overlay)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the metrics registry (cache counters, "
+                         "report-line tallies) as JSON")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the basis-term attribution of the winning "
+                         "cell (per-term seconds and cost categories)")
     args = ap.parse_args()
+
+    if args.trace_json:
+        _obs_trace.enable(process_name="autoshard")
 
     # model provenance: which weights are scoring this sweep (source /
     # revision matter once online refits start bumping registry files)
@@ -191,13 +206,15 @@ def main() -> None:
         prov.append(f"fit_rel_err={meta['fit_geomean_rel_err']:.3f}")
     if "refit_epoch" in meta:
         prov.append(f"refit_epoch={meta['refit_epoch']}")
-    print(f"[autoshard] cost model: {' '.join(prov)}")
+    _obs_report.emit("autoshard", text=f"cost model: {' '.join(prov)}")
 
-    ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
-                    model=args.model, top_k=args.top,
-                    n_devices=args.devices,
-                    tune_kernels=args.tune_kernels,
-                    stream_chunk_cells=args.stream_chunk)
+    with _obs_trace.get_tracer().span("autoshard.search", arch=args.arch,
+                                      shape=args.shape):
+        ranked = search(args.arch, args.shape, multi_pod=args.multi_pod,
+                        model=args.model, top_k=args.top,
+                        n_devices=args.devices,
+                        tune_kernels=args.tune_kernels,
+                        stream_chunk_cells=args.stream_chunk)
     # None resolves to the built-in analytic seed, which an explicit
     # "--model tpu-v5e" does NOT (a fitted registry file would shadow it)
     model_label = args.model or "tpu-v5e analytic seed"
@@ -215,11 +232,26 @@ def main() -> None:
         if args.tune_kernels:
             for kern, blocks in entry[3].items():
                 print(f"{'':14}· {kern}: {blocks}")
+    if args.explain and ranked:
+        t, p, mesh = ranked[0][0], ranked[0][1], ranked[0][2]
+        from repro.obs.explain import score_explain
+        exp = score_explain(ARCHS[args.arch],
+                            wl.from_shape(SHAPES[args.shape]), p, mesh,
+                            model=resolved)
+        print("winning cell attribution:")
+        print(exp.report())
     # persistent fused-program cache telemetry: a repeat invocation of the
     # same search reports "warm" (all programs loaded, zero compiles) —
     # CI's compile-cache smoke step asserts exactly that
     from repro.core import exprops
     print(exprops.disk_cache_report())
+
+    if args.trace_json:
+        _obs_trace.get_tracer().save(args.trace_json)
+        print(f"[autoshard] trace written to {args.trace_json}")
+    if args.metrics_json:
+        _obs_metrics.REGISTRY.save_json(args.metrics_json)
+        print(f"[autoshard] metrics written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

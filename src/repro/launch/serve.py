@@ -13,6 +13,8 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, get_arch
 from repro.models import transformer
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.runtime.server import DecodeServer, Request
 
 
@@ -25,14 +27,27 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--admission", default="fifo",
+                    choices=("fifo", "model"),
+                    help="slot-refill policy: arrival order or "
+                         "shortest-predicted-job-first")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the serve "
+                         "run (prefill/decode spans + predicted overlay)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the metrics registry as JSON on exit")
     args = ap.parse_args()
+
+    if args.trace_json:
+        _obs_trace.enable(process_name="serve")
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params, _ = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     server = DecodeServer(cfg, params, slots=args.slots,
-                          max_len=args.max_len, seed=args.seed)
+                          max_len=args.max_len, seed=args.seed,
+                          admission=args.admission)
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -49,6 +64,16 @@ def main() -> None:
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[:6]={r.prompt[:6].tolist()} "
               f"out[:8]={r.out[:8]}")
+
+    tracer = _obs_trace.get_tracer()
+    if args.trace_json:
+        for line in tracer.report_lines():
+            print(f"[trace] {line}")
+        tracer.save(args.trace_json)
+        print(f"[serve] trace written to {args.trace_json}")
+    if args.metrics_json:
+        _obs_metrics.REGISTRY.save_json(args.metrics_json)
+        print(f"[serve] metrics written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,8 @@ import jax
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCHS, get_arch
 from repro.data.pipeline import DataConfig
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.core import predictor
 from repro.distributed.plan import plan_for
@@ -44,7 +46,15 @@ def main() -> None:
     ap.add_argument("--calib-auto-register", action="store_true",
                     help="write drift-refit models into the registry "
                          "(bumps the model file revision)")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(measured step spans + predicted overlay)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the metrics registry as JSON on exit")
     args = ap.parse_args()
+
+    if args.trace_json:
+        _obs_trace.enable(process_name="train")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -73,6 +83,16 @@ def main() -> None:
     if trainer.calibrator is not None:
         print("[calib] refit report:")
         print(trainer.calibrator.final_report())
+
+    tracer = _obs_trace.get_tracer()
+    if args.trace_json:
+        for line in tracer.report_lines():
+            print(f"[trace] {line}")
+        tracer.save(args.trace_json)
+        print(f"[train] trace written to {args.trace_json}")
+    if args.metrics_json:
+        _obs_metrics.REGISTRY.save_json(args.metrics_json)
+        print(f"[train] metrics written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""Unified observability layer: tracing, attribution, metrics.
+
+Three pillars, one package:
+
+* ``repro.obs.trace`` — nested spans with a *predicted* overlay and
+  Chrome-trace/Perfetto export (``--trace-json``);
+* ``repro.obs.explain`` — basis-term attribution: ``score_explain``
+  opens the fused GEMV into per-term/per-category addends, and
+  ``attribute_residual`` projects measured-vs-predicted error back onto
+  the basis;
+* ``repro.obs.metrics`` — ``Counter``/``Gauge``/``Histogram`` registry
+  with Prometheus text exposition and a JSON dump (``--metrics-json``),
+  the single home for cache, calibration, and admission counters.
+
+Plus ``repro.obs.report``, the one formatter behind every
+``[tag] key=value`` status line.
+
+Import discipline: ``trace``/``metrics``/``report`` import nothing from
+the rest of ``repro`` (core modules import them freely); ``explain``
+imports ``repro.core`` and is therefore exposed *lazily* here so that
+``core`` modules importing ``repro.obs.metrics`` never trigger a cycle.
+"""
+from __future__ import annotations
+
+from repro.obs import metrics, report, trace
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               REGISTRY, get_registry)
+from repro.obs.report import emit, format_line
+from repro.obs.trace import (NULL_TRACER, Span, Tracer, enable, get_tracer,
+                             set_tracer)
+
+__all__ = [
+    "metrics", "report", "trace", "explain",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "get_registry", "emit", "format_line",
+    "NULL_TRACER", "Span", "Tracer", "enable", "get_tracer", "set_tracer",
+    "score_explain", "attribute_residual", "attribute_residual_pv",
+    "Explanation", "TermContribution", "ResidualAttribution",
+]
+
+_EXPLAIN_NAMES = {
+    "explain", "score_explain", "attribute_residual",
+    "attribute_residual_pv", "Explanation", "TermContribution",
+    "ResidualAttribution", "explain_program",
+}
+
+
+def __getattr__(name: str):
+    if name in _EXPLAIN_NAMES:
+        import importlib
+        _explain = importlib.import_module("repro.obs.explain")
+        if name == "explain":
+            return _explain
+        return getattr(_explain, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -36,7 +36,20 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer
+from repro.obs import metrics as _obs_metrics
+from repro.obs import report as _obs_report
+from repro.obs import trace as _obs_trace
 from repro.runtime import steps
+
+_ADMISSIONS = _obs_metrics.REGISTRY.counter(
+    "repro_admission_decisions_total",
+    "admission outcomes at slot refill, by policy and outcome "
+    "(admit / slo_defer)")
+_SLO_VIOLATIONS = _obs_metrics.REGISTRY.counter(
+    "repro_slo_violations_total",
+    "measured decode iterations that exceeded the decode-latency SLO")
+_DECODE_SECONDS = _obs_metrics.REGISTRY.histogram(
+    "repro_decode_step_seconds", "measured decode-iteration wall seconds")
 
 
 @dataclass
@@ -203,11 +216,17 @@ class DecodeServer:
         (A production server prefills with one chunked forward; the decode
         loop here is the clear-and-correct path for the CPU example, and
         prefill_step covers the fast path in the dry-run/bench.)"""
-        for t in req.prompt:
-            tok = np.zeros((self.slots, 1), np.int32)
-            tok[slot, 0] = t
-            logits, self.state = self._decode(
-                self.params, self.state, jnp.asarray(tok))
+        tracer = _obs_trace.get_tracer()
+        pred = None
+        if tracer.enabled and self.scorer is not None:
+            pred = float(self.scorer.prefill_seconds([len(req.prompt)])[0])
+        with tracer.span("prefill", predicted_s=pred, rid=req.rid,
+                         plen=len(req.prompt), slot=slot):
+            for t in req.prompt:
+                tok = np.zeros((self.slots, 1), np.int32)
+                tok[slot, 0] = t
+                logits, self.state = self._decode(
+                    self.params, self.state, jnp.asarray(tok))
         self.active[slot] = req
         self.remaining[slot] = req.max_new
         self._ctx[slot] = len(req.prompt)
@@ -216,7 +235,10 @@ class DecodeServer:
         """Index into ``self.queue`` of the next request to admit, or None
         to defer admission this iteration (SLO guard)."""
         if self.admission == "fifo" or self.scorer is None:
-            return 0 if self.queue else None
+            if not self.queue:
+                return None
+            _ADMISSIONS.inc(1, policy="fifo", outcome="admit")
+            return 0
         if not self.queue:
             return None
         active, ct = self._n_active(), self._cache_tokens()
@@ -230,12 +252,18 @@ class DecodeServer:
             nxt = self.scorer.decode_step_seconds(
                 active + 1, ct + min(len(self.queue[i].prompt), cap))
             if float(nxt) > self.slo_decode_s:
+                _ADMISSIONS.inc(1, policy="model", outcome="slo_defer")
+                _obs_trace.get_tracer().instant(
+                    "slo_defer", rid=self.queue[i].rid,
+                    predicted_next_s=float(nxt), slo_s=self.slo_decode_s)
                 return None     # admitting would break the decode SLO
         req = self.queue[i]
-        print(f"[admit] rid={req.rid} plen={len(req.prompt)} "
-              f"pred_prefill={sc['prefill_s'][i]*1e3:.3f}ms "
-              f"decode_delta={sc['decode_delta_s'][i]*1e6:.3f}us "
-              f"score={sc['score_s'][i]*1e3:.3f}ms policy=model")
+        _ADMISSIONS.inc(1, policy="model", outcome="admit")
+        _obs_report.emit("admit", {
+            "rid": req.rid, "plen": len(req.prompt),
+            "pred_prefill": f"{sc['prefill_s'][i]*1e3:.3f}ms",
+            "decode_delta": f"{sc['decode_delta_s'][i]*1e6:.3f}us",
+            "score": f"{sc['score_s'][i]*1e3:.3f}ms", "policy": "model"})
         return i
 
     def _refill(self) -> None:
@@ -252,13 +280,26 @@ class DecodeServer:
         for s, req in enumerate(self.active):
             if req is not None:
                 tok[s, 0] = req.out[-1] if req.out else req.prompt[-1]
+        tracer = _obs_trace.get_tracer()
+        pred = None
+        active = self._n_active()
+        if tracer.enabled and self.scorer is not None and active:
+            pred = float(self.scorer.decode_step_seconds(
+                active, self._cache_tokens()))
         t0 = time.perf_counter()
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(tok))
+        with tracer.span("decode_step", predicted_s=pred, active=active):
+            logits, self.state = self._decode(self.params, self.state,
+                                              jnp.asarray(tok))
+            if self.calibrator is not None or tracer.enabled \
+                    or self.slo_decode_s is not None:
+                jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        _DECODE_SECONDS.observe(dt)
+        if self.slo_decode_s is not None and active \
+                and dt > self.slo_decode_s:
+            _SLO_VIOLATIONS.inc()
         if self.calibrator is not None:
-            jax.block_until_ready(logits)
-            self.calibrator.observe(self._decode_pv,
-                                    time.perf_counter() - t0, tag="decode",
+            self.calibrator.observe(self._decode_pv, dt, tag="decode",
                                     phase="decode")
         self.rng, sub = jax.random.split(self.rng)
         nxt = np.asarray(jax.random.categorical(

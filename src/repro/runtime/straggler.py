@@ -22,9 +22,14 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import exprops
+from repro.obs import metrics as _obs_metrics
 
 #: incremental-rescore cache for monitor re-anchoring (see ``from_model``)
 _BASIS_CACHE = exprops.BasisCache(maxsize=2048)
+
+_STRAGGLER_EVENTS = _obs_metrics.REGISTRY.counter(
+    "repro_straggler_events_total",
+    "hosts flagged over the predicted-step threshold, by action")
 
 
 @dataclass
@@ -100,6 +105,7 @@ class StragglerMonitor:
             ev = StragglerEvent(step, int(h), float(self._state[h]), thr,
                                 self.policy)
             new.append(ev)
+            _STRAGGLER_EVENTS.inc(1, action=self.policy)
         self.events.extend(new)
         return new
 

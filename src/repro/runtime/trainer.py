@@ -29,9 +29,15 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.data.pipeline import DataConfig, PackedLoader
 from repro.distributed.plan import Plan
 from repro.models import transformer
+from repro.obs import metrics as _obs_metrics
+from repro.obs import report as _obs_report
+from repro.obs import trace as _obs_trace
 from repro.optim import optimizers as opt
 from repro.runtime import steps
 from repro.runtime.straggler import StragglerMonitor
+
+_STEP_SECONDS = _obs_metrics.REGISTRY.histogram(
+    "repro_train_step_seconds", "measured trainer step wall seconds")
 
 
 @dataclass
@@ -102,7 +108,8 @@ class Trainer:
             if latest is not None:
                 self.state, _ = store.restore(tc.ckpt_dir, self.state,
                                               latest)[0], None
-                print(f"[trainer] resumed from step {latest}")
+                _obs_report.emit("trainer", text=f"resumed from step "
+                                                 f"{latest}")
 
     # ------------------------------------------------------------------
     @property
@@ -123,14 +130,21 @@ class Trainer:
     def train(self, n_steps: int,
               on_metrics: Optional[Callable[[int, Dict], None]] = None
               ) -> List[Dict[str, float]]:
+        tracer = _obs_trace.get_tracer()
         for _ in range(n_steps):
             step = self.step
             batch = {k: jnp.asarray(v)
                      for k, v in self.loader.batch(step).items()}
+            # the model's prediction for THIS step — the straggler monitor
+            # carries it (re-anchored on every refit), so the span's
+            # predicted overlay tracks the live model, not the launch one
+            pred_s = self.monitor.predicted_step_s
             t0 = time.perf_counter()
-            self.state, metrics = self.step_fn(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
+            with tracer.span("train_step", predicted_s=pred_s, step=step):
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
+            _STEP_SECONDS.observe(dt)
             self.monitor.observe(step, [dt])
             if self.calibrator is not None:
                 ev = self.calibrator.observe(self._step_pv, dt, step=step,
@@ -140,11 +154,13 @@ class Trainer:
                     # straggler threshold to the refit model's prediction
                     self.monitor.reanchor(
                         self.calibrator.model.predict(self._step_pv))
-                    print(f"[calib] drift detected at step {step} "
-                          f"(direction={ev.direction}, onset seq "
-                          f"{ev.onset_seq}): refit epoch "
-                          f"{self.calibrator.refits}, revision "
-                          f"{self.calibrator.revision}")
+                    _obs_report.emit(
+                        "calib",
+                        text=f"drift detected at step {step} "
+                             f"(direction={ev.direction}, onset seq "
+                             f"{ev.onset_seq}): refit epoch "
+                             f"{self.calibrator.refits}, revision "
+                             f"{self.calibrator.revision}")
 
             m = {"step": step, "loss": float(metrics["loss"]),
                  "grad_norm": float(metrics["grad_norm"]),
@@ -153,11 +169,14 @@ class Trainer:
             if on_metrics:
                 on_metrics(step, m)
             elif step % self.tc.log_every == 0:
-                print(f"[trainer] step {step:5d} loss {m['loss']:.4f} "
-                      f"gnorm {m['grad_norm']:.3f} {dt*1e3:.0f}ms")
+                _obs_report.emit(
+                    "trainer",
+                    text=f"step {step:5d} loss {m['loss']:.4f} "
+                         f"gnorm {m['grad_norm']:.3f} {dt*1e3:.0f}ms")
             if self.calibrator is not None \
                     and step % self.tc.log_every == 0:
-                print(f"[calib] {self.calibrator.report_line()}")
+                _obs_report.emit("calib",
+                                 text=self.calibrator.report_line())
             if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
                 self._save()
         if self.tc.ckpt_dir and self.tc.save_on_exit:
