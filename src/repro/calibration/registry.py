@@ -17,13 +17,27 @@ from __future__ import annotations
 import json
 import os
 import re
+import shutil
 from typing import Dict, Optional, Tuple
 
 from repro.calibration import seeds
-from repro.core.model import LinearCostModel, ModelSchemaError
+from repro.core.model import (FutureSchemaError, LinearCostModel,
+                              ModelSchemaError)
+from repro.obs import metrics as _obs_metrics
+from repro.obs import report as _obs_report
 
 REGISTRY_ENV = "REPRO_MODEL_REGISTRY"
 DEFAULT_REGISTRY_DIR = os.path.join("experiments", "registry")
+
+#: revision backups kept per device (``<safe>.rev<NNNN>.json``), written by
+#: ``register_revision`` so a corrupted active file has somewhere to fall
+#: back to
+KEEP_REVISION_BACKUPS = 3
+
+_FALLBACKS = _obs_metrics.REGISTRY.counter(
+    "repro_registry_fallbacks_total",
+    "corrupt registry model files quarantined and recovered from a "
+    "previous revision or analytic seed, by device")
 
 
 class UnknownDeviceError(KeyError):
@@ -49,6 +63,32 @@ def default_registry_dir() -> str:
 def _model_path(registry_dir: str, device: str) -> str:
     safe = re.sub(r"[^A-Za-z0-9._+-]", "_", device)
     return os.path.join(registry_dir, f"{safe}.json")
+
+
+def _revision_backups(registry_dir: str, device: str):
+    """Revision-backup paths for ``device``, newest revision first."""
+    safe = re.sub(r"[^A-Za-z0-9._+-]", "_", device)
+    pat = re.compile(re.escape(safe) + r"\.rev(\d+)\.json$")
+    out = []
+    try:
+        names = os.listdir(registry_dir)
+    except OSError:
+        return []
+    for fn in names:
+        m = pat.fullmatch(fn)
+        if m:
+            out.append((int(m.group(1)), os.path.join(registry_dir, fn)))
+    return [p for _, p in sorted(out, reverse=True)]
+
+
+def _quarantine(path: str) -> Optional[str]:
+    """Move a corrupt file aside as ``<path>.corrupt`` (best-effort)."""
+    qpath = path + ".corrupt"
+    try:
+        os.replace(path, qpath)
+        return qpath
+    except OSError:
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -83,13 +123,28 @@ def register_revision(model: LinearCostModel,
     name = name or model.device
     path = _model_path(registry_dir, name)
     prev = 0
+    prev_valid = False
     if os.path.exists(path):
         try:
             with open(path) as f:
                 prev = int(LinearCostModel.from_json_dict(
                     json.load(f)).meta.get("revision", 0))
+            prev_valid = True
         except (OSError, ValueError, KeyError, TypeError):
             prev = 0
+    if prev_valid:
+        # keep the outgoing revision as a fallback target: the hardened
+        # ``load_model`` degrades to the newest backup when the active
+        # file is later found corrupt
+        safe = re.sub(r"[^A-Za-z0-9._+-]", "_", name)
+        try:
+            shutil.copyfile(path, os.path.join(
+                registry_dir, f"{safe}.rev{prev:04d}.json"))
+            for old in _revision_backups(registry_dir,
+                                         name)[KEEP_REVISION_BACKUPS:]:
+                os.remove(old)
+        except OSError:
+            pass   # backups are best-effort; never fail the refit
     model.meta["revision"] = prev + 1
     return save_model(model, registry_dir, name=name), prev + 1
 
@@ -116,11 +171,38 @@ def _analytic_seed(device: str) -> Optional[LinearCostModel]:
 def load_model(device: str, registry_dir: Optional[str] = None
                ) -> LinearCostModel:
     """Load the model for ``device``: fitted registry file first, then the
-    built-in analytic seeds.  Raises ``UnknownDeviceError`` otherwise."""
+    built-in analytic seeds.  Raises ``UnknownDeviceError`` otherwise.
+
+    Hardened against corruption (ISSUE 9): a truncated/garbled active
+    file is quarantined as ``*.corrupt`` and the load falls back to the
+    newest valid revision backup (written by ``register_revision``), then
+    the analytic seed — counted in ``repro_registry_fallbacks_total``.
+    A FUTURE schema re-raises (an upgrade problem, not corruption)."""
     registry_dir = registry_dir or default_registry_dir()
     path = _model_path(registry_dir, device)
     if os.path.exists(path):
-        return LinearCostModel.load(path)
+        try:
+            return LinearCostModel.load(path)
+        except FutureSchemaError:
+            raise
+        except (OSError, ValueError, KeyError, TypeError) as exc:
+            qpath = _quarantine(path)
+            _FALLBACKS.inc(1, device=device)
+            _obs_report.emit("registry", {
+                "device": device, "action": "fallback",
+                "quarantined": qpath or "<failed>"},
+                text=f"corrupt model file ({type(exc).__name__}); "
+                     f"falling back")
+            for bpath in _revision_backups(registry_dir, device):
+                try:
+                    model = LinearCostModel.load(bpath)
+                except (OSError, ValueError, KeyError, TypeError):
+                    continue
+                _obs_report.emit("registry", {
+                    "device": device, "action": "fallback",
+                    "revision": model.meta.get("revision", "?")},
+                    text=f"recovered from backup {os.path.basename(bpath)}")
+                return model
     model = _analytic_seed(device)
     if model is not None:
         return model
@@ -134,8 +216,8 @@ def list_models(registry_dir: Optional[str] = None) -> Dict[str, str]:
     out: Dict[str, str] = {n: "analytic" for n in seeds.ANALYTIC_SEEDS}
     if os.path.isdir(registry_dir):
         for fn in sorted(os.listdir(registry_dir)):
-            if not fn.endswith(".json"):
-                continue
+            if not fn.endswith(".json") or re.search(r"\.rev\d+\.json$", fn):
+                continue   # revision backups are fallbacks, not entries
             path = os.path.join(registry_dir, fn)
             try:
                 with open(path) as f:

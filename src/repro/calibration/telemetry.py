@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 import os
 import tempfile
 from collections import deque
@@ -91,7 +92,11 @@ class TelemetrySink:
         ``phase`` keys the sample (and its vector-table entry) by workload
         phase, so refit windows never mix prefill/decode rows into a train
         fit."""
-        if not seconds > 0:
+        # `not seconds > 0` alone already rejects NaN (NaN > 0 is False)
+        # but would let +inf through into the ring — and a non-finite pv
+        # entry would poison any refit window that selects it
+        if not (math.isfinite(seconds) and seconds > 0) or \
+                any(not math.isfinite(float(v)) for v in pv.values()):
             self.n_dropped += 1
             _DROPPED.inc()
             return None

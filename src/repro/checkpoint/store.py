@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import zlib
@@ -29,6 +30,38 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs import metrics as _obs_metrics
+from repro.obs import report as _obs_report
+
+_CKPT_FALLBACKS = _obs_metrics.REGISTRY.counter(
+    "repro_checkpoint_fallbacks_total",
+    "invalid checkpoints quarantined by restore_latest_valid while "
+    "falling back to an older step")
+
+_STEP_DIR = re.compile(r"step_(\d+)$")
+
+
+class CheckpointError(AssertionError):
+    """A checkpoint failed integrity verification (truncated manifest,
+    tree/shape/dtype mismatch, crc failure).  Subclasses AssertionError
+    so pre-hardening callers catching the old bare asserts keep working;
+    new callers should prefer ``restore_latest_valid``, which quarantines
+    and falls back instead of raising."""
+
+
+def _step_dirs(ckpt_dir: str) -> List[int]:
+    """Steps with a complete-looking directory (manifest present),
+    ascending.  Non-step entries (``quarantine/``, ``*.tmp``) are
+    ignored rather than crashing the parse."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_DIR.fullmatch(d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
 
 
 def _leaves_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -72,14 +105,8 @@ def save(ckpt_dir: str, step: int, tree: Any,
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = []
-    for d in os.listdir(ckpt_dir):
-        if d.startswith("step_") and not d.endswith(".tmp") and \
-                os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
-            steps.append(int(d[len("step_"):]))
-    return max(steps) if steps else None
+    steps = _step_dirs(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None) -> Any:
@@ -87,28 +114,91 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None) -> Any:
     verified leaf-by-leaf against the manifest keys/shapes/dtypes/crc32)."""
     if step is None:
         step = latest_step(ckpt_dir)
-        assert step is not None, f"no checkpoint under {ckpt_dir}"
+        if step is None:
+            raise CheckpointError(f"no checkpoint under {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as exc:
+        raise CheckpointError(
+            f"corrupt manifest in step {step}: {exc}") from exc
 
     tpl = _leaves_with_paths(template)
-    assert len(tpl) == len(manifest["leaves"]), \
-        (len(tpl), len(manifest["leaves"]))
+    if len(tpl) != len(manifest.get("leaves", [])):
+        raise CheckpointError(
+            f"corrupt checkpoint step {step}: {len(tpl)} template leaves "
+            f"but {len(manifest.get('leaves', []))} in manifest")
     leaves = []
     for (key, tleaf), m in zip(tpl, manifest["leaves"]):
-        assert key == m["key"], f"tree mismatch: {key} != {m['key']}"
-        arr = np.load(os.path.join(d, m["file"]), allow_pickle=False)
+        if key != m["key"]:
+            raise CheckpointError(f"tree mismatch: {key} != {m['key']}")
+        try:
+            arr = np.load(os.path.join(d, m["file"]), allow_pickle=False)
+        except (OSError, ValueError) as exc:
+            raise CheckpointError(
+                f"corrupt leaf {key} in step {step}: {exc}") from exc
         if str(arr.dtype) != m["dtype"]:
             # ml_dtypes (bfloat16, fp8) round-trip through .npy as raw
             # void records; view them back to the manifest dtype
-            arr = arr.view(np.dtype(m["dtype"]))
-        assert list(arr.shape) == m["shape"] and str(arr.dtype) == m["dtype"]
+            try:
+                arr = arr.view(np.dtype(m["dtype"]))
+            except (TypeError, ValueError) as exc:
+                raise CheckpointError(
+                    f"corrupt leaf {key} in step {step}: dtype "
+                    f"{arr.dtype} != {m['dtype']}") from exc
+        if list(arr.shape) != m["shape"] or str(arr.dtype) != m["dtype"]:
+            raise CheckpointError(
+                f"corrupt leaf {key} in step {step}: shape/dtype "
+                f"{arr.shape}/{arr.dtype} != {m['shape']}/{m['dtype']}")
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-        assert crc == m["crc32"], f"corrupt leaf {key} in step {step}"
+        if crc != m["crc32"]:
+            raise CheckpointError(f"corrupt leaf {key} in step {step}")
         leaves.append(arr)
     struct = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(struct, leaves), manifest
+
+
+def quarantine(ckpt_dir: str, step: int) -> Optional[str]:
+    """Move an invalid checkpoint into ``<ckpt_dir>/quarantine/`` so
+    ``latest_step`` stops offering it (best-effort; returns the new path,
+    replacing any earlier quarantined copy of the same step)."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    qdir = os.path.join(ckpt_dir, "quarantine")
+    dst = os.path.join(qdir, f"step_{step:08d}")
+    try:
+        os.makedirs(qdir, exist_ok=True)
+        if os.path.exists(dst):
+            shutil.rmtree(dst, ignore_errors=True)
+        os.rename(src, dst)
+        return dst
+    except OSError:
+        shutil.rmtree(src, ignore_errors=True)  # still unblock the parse
+        return None
+
+
+def restore_latest_valid(ckpt_dir: str, template: Any
+                         ) -> Optional[Tuple[Any, Dict[str, Any], int]]:
+    """Restore the newest checkpoint that passes verification.
+
+    Invalid checkpoints (truncated manifest, crc/shape mismatch — e.g. a
+    write interrupted by the very preemption being recovered from) are
+    quarantined under ``<ckpt_dir>/quarantine/`` and the next-older step
+    is tried, so a corrupt newest checkpoint costs one interval of
+    replay, never the run.  Returns ``(tree, manifest, step)`` or None
+    when no valid checkpoint exists."""
+    for step in reversed(_step_dirs(ckpt_dir)):
+        try:
+            tree, manifest = restore(ckpt_dir, template, step)
+            return tree, manifest, step
+        except CheckpointError as exc:
+            qpath = quarantine(ckpt_dir, step)
+            _CKPT_FALLBACKS.inc()
+            _obs_report.emit("ckpt", {
+                "step": step, "action": "quarantine",
+                "to": qpath or "<removed>"},
+                text=f"invalid checkpoint skipped: {exc}")
+    return None
 
 
 def prune(ckpt_dir: str, keep: int = 3) -> None:
@@ -119,8 +209,8 @@ def prune(ckpt_dir: str, keep: int = 3) -> None:
         if d.endswith(".tmp"):
             shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
     steps = sorted(s for s in (
-        int(d[len("step_"):]) for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and not d.endswith(".tmp")))
+        int(m.group(1)) for m in (
+            _STEP_DIR.fullmatch(d) for d in os.listdir(ckpt_dir)) if m))
     for s in steps[:-keep] if keep else steps:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)

@@ -890,6 +890,13 @@ def load_or_build(key: Optional[str],
             return prog
         except Exception:   # any unreadable/corrupt record -> rebuild
             DISK_STATS["errors"] += 1
+            try:
+                # quarantine the corrupt entry so it stops costing a parse
+                # attempt on every warm start; the rebuild below rewrites
+                # the real path atomically
+                os.replace(path, path + ".corrupt")
+            except OSError:
+                pass
     prog = BasisProgram.build(builder())
     DISK_STATS["misses"] += 1
     if path:

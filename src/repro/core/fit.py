@@ -23,6 +23,14 @@ import numpy as np
 
 from repro.core import properties as props
 from repro.core.model import LinearCostModel
+from repro.obs import metrics as _obs_metrics
+from repro.obs import report as _obs_report
+
+_RLS_QUARANTINED = _obs_metrics.REGISTRY.counter(
+    "repro_rls_quarantined_total",
+    "streaming calibration samples quarantined (non-finite/non-positive "
+    "seconds or non-finite property values) instead of entering the RLS "
+    "state")
 
 
 def fit_relative(pvs: Sequence[Mapping[str, float]],
@@ -133,6 +141,7 @@ class RLSState:
         self.w0 = (np.zeros(k) if w0 is None
                    else np.asarray(w0, dtype=np.float64).copy())
         self.n_samples = 0
+        self.n_quarantined = 0
         self.col_scale: Optional[np.ndarray] = None
         self._G: Optional[np.ndarray] = None   # scaled-space Gram + prior
         self._b: Optional[np.ndarray] = None   # scaled-space RHS
@@ -182,9 +191,33 @@ class RLSState:
         self._w = None
         self.n_samples += 1
 
-    def observe(self, pv: Mapping[str, float], seconds: float) -> None:
-        """Ingest one (property vector, measured seconds) sample."""
+    def observe(self, pv: Mapping[str, float], seconds: float) -> bool:
+        """Ingest one (property vector, measured seconds) sample.
+
+        The streaming path must survive a poisoned measurement (a clock
+        glitch, an injected NaN): a non-finite/non-positive ``seconds``
+        or a non-finite property value is QUARANTINED — counted in
+        ``repro_rls_quarantined_total``, reported on a ``[calib]`` line,
+        and the state left untouched — instead of raising the
+        ``ValueError`` the strict batch path (``fit_relative``) keeps.
+        Returns True when the sample entered the state."""
+        bad = None
+        if not (np.isfinite(seconds) and seconds > 0):
+            bad = f"seconds={seconds}"
+        else:
+            vals = np.asarray([pv.get(k, 0.0) for k in self.keys],
+                              dtype=np.float64)
+            if not np.all(np.isfinite(vals)):
+                bad = "non-finite property value"
+        if bad is not None:
+            self.n_quarantined += 1
+            _RLS_QUARANTINED.inc()
+            _obs_report.emit("calib", {
+                "action": "quarantine", "n": self.n_quarantined},
+                text=f"sample rejected ({bad})")
+            return False
         self.update(self.row(pv, seconds), 1.0)
+        return True
 
     def observe_many(self, pvs: Sequence[Mapping[str, float]],
                      times: Sequence[float]) -> None:

@@ -25,6 +25,13 @@ class ModelSchemaError(ValueError):
     """A serialized model has an unreadable or future schema."""
 
 
+class FutureSchemaError(ModelSchemaError):
+    """The schema postdates this checkout — a VERSION problem, not file
+    corruption.  The hardened registry fallback re-raises this instead of
+    degrading to an older revision: falling back would silently mask the
+    need to upgrade."""
+
+
 @dataclass
 class LinearCostModel:
     keys: List[str]
@@ -81,10 +88,12 @@ class LinearCostModel:
     @classmethod
     def from_json_dict(cls, d: Mapping[str, object]) -> "LinearCostModel":
         schema = d.get("schema", 0)  # pre-versioning files are legacy v0
-        if not isinstance(schema, int) or schema > SCHEMA_VERSION:
-            raise ModelSchemaError(
+        if isinstance(schema, int) and schema > SCHEMA_VERSION:
+            raise FutureSchemaError(
                 f"model schema {schema!r} is newer than supported "
                 f"({SCHEMA_VERSION}); upgrade this checkout to read it")
+        if not isinstance(schema, int):
+            raise ModelSchemaError(f"model schema {schema!r} is not an int")
         if schema >= 1 and d.get("kind") != "linear_cost_model":
             raise ModelSchemaError(
                 f"not a linear_cost_model record: kind={d.get('kind')!r}")

@@ -36,6 +36,21 @@ def main() -> None:
                          "run (prefill/decode spans + predicted overlay)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump the metrics registry as JSON on exit")
+    # --- supervised degradation / chaos (runtime/supervisor.py) ---
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under ServingSupervisor: decode watchdog, "
+                         "slot eviction, admission throttling, load "
+                         "shedding with retry-after")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC|PATH",
+                    help="deterministic fault schedule (iteration-indexed"
+                         "); implies --supervise")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--slo-decode-s", type=float, default=None,
+                    help="decode-iteration latency SLO (admission defers "
+                         "when the model predicts a breach)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="shed queued requests beyond this depth "
+                         "(stamped with retry-after)")
     args = ap.parse_args()
 
     if args.trace_json:
@@ -45,9 +60,20 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     params, _ = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+    supervised = args.supervise or args.fault_plan
+    injector = None
+    if supervised:
+        from repro.runtime.faults import FaultInjector, FaultPlan
+        fplan = FaultPlan.parse(args.fault_plan, seed=args.chaos_seed) \
+            if args.fault_plan else FaultPlan(seed=args.chaos_seed)
+        injector = FaultInjector(fplan)
+        if fplan:
+            print(f"[serve] fault plan armed: {fplan.describe()}")
     server = DecodeServer(cfg, params, slots=args.slots,
                           max_len=args.max_len, seed=args.seed,
-                          admission=args.admission)
+                          admission=args.admission,
+                          slo_decode_s=args.slo_decode_s,
+                          injector=injector)
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -56,7 +82,15 @@ def main() -> None:
         server.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
 
     t0 = time.perf_counter()
-    done = server.run()
+    if supervised:
+        from repro.runtime.supervisor import ServingPolicy, ServingSupervisor
+        sup = ServingSupervisor(
+            server, ServingPolicy(max_queue=args.max_queue),
+            injector=injector)
+        done = sup.run()
+        sup.report()
+    else:
+        done = server.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "

@@ -51,6 +51,28 @@ def main() -> None:
                          "(measured step spans + predicted overlay)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump the metrics registry as JSON on exit")
+    # --- supervised recovery / chaos (runtime/supervisor.py, faults.py) ---
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the Supervisor: watchdog deadlines, "
+                         "backoff, elastic replan + checkpoint-resume on "
+                         "device loss")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC|PATH",
+                    help="deterministic fault schedule — "
+                         "'kind@step[:k=v,..];..' (e.g. "
+                         "'corrupt_registry@7;device_loss@12') or a JSON "
+                         "plan path; implies --supervise")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for fault payloads and backoff jitter")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fleet size the supervisor replans over")
+    ap.add_argument("--model", default=None, metavar="DEVICE",
+                    help="cost-model device name pricing the replan "
+                         "candidates (hardened registry lookup)")
+    ap.add_argument("--registry", default=None, metavar="DIR",
+                    help="model-registry directory override")
+    ap.add_argument("--watchdog-k", type=float, default=6.0,
+                    help="watchdog deadline = k x max(predicted, median)")
+    ap.add_argument("--max-recoveries", type=int, default=8)
     args = ap.parse_args()
 
     if args.trace_json:
@@ -77,8 +99,34 @@ def main() -> None:
     print(f"[train] {cfg.name}: {cfg.n_params()/1e6:.1f}M params, "
           f"predicted full-arch step {pred.seconds*1e3:.1f}ms on 1 chip")
 
-    trainer = Trainer(cfg, dc, tc)
-    hist = trainer.train(args.steps)
+    if args.supervise or args.fault_plan:
+        from repro.core.workload import WorkloadSpec
+        from repro.runtime.faults import FaultInjector, FaultPlan
+        from repro.runtime.supervisor import BackoffPolicy, Supervisor
+
+        fplan = FaultPlan.parse(args.fault_plan, seed=args.chaos_seed) \
+            if args.fault_plan else FaultPlan(seed=args.chaos_seed)
+        injector = FaultInjector(fplan, ckpt_dir=args.ckpt,
+                                 registry_dir=args.registry,
+                                 registry_device=args.model)
+        if fplan:
+            print(f"[train] fault plan armed: {fplan.describe()}")
+        workload = WorkloadSpec(phase="train", global_batch=args.batch,
+                                seq_len=args.seq, name="train_live")
+        sup = Supervisor(
+            lambda mesh: Trainer(cfg, dc, tc, injector=injector),
+            args.steps, cfg=ARCHS[args.arch], workload=workload,
+            n_devices=args.devices, model=args.model,
+            registry_dir=args.registry, injector=injector,
+            watchdog_k=args.watchdog_k,
+            backoff=BackoffPolicy(seed=args.chaos_seed),
+            max_recoveries=args.max_recoveries)
+        hist = sup.run()
+        sup.report()
+        trainer = sup.trainer
+    else:
+        trainer = Trainer(cfg, dc, tc)
+        hist = trainer.train(args.steps)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
     if trainer.calibrator is not None:
         print("[calib] refit report:")

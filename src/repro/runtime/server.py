@@ -59,6 +59,10 @@ class Request:
     max_new: int = 32
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # --- supervised-degradation bookkeeping (runtime/supervisor.py) ---
+    shed: bool = False                      # dropped to preserve the SLO
+    retry_after_s: Optional[float] = None   # stamped when shed
+    evictions: int = 0                      # slot evictions survived
 
 
 class AdmissionScorer:
@@ -155,7 +159,7 @@ class DecodeServer:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: int = 0, seed: int = 0,
                  calibrator=None, admission: str = "fifo", model=None,
-                 slo_decode_s: Optional[float] = None):
+                 slo_decode_s: Optional[float] = None, injector=None):
         assert cfg.n_input_codebooks == 1, "codebook serving via examples/"
         if admission not in ("fifo", "model"):
             raise ValueError(f"admission must be 'fifo' or 'model', "
@@ -171,6 +175,8 @@ class DecodeServer:
         self.queue: List[Request] = []
         self.remaining = np.zeros(slots, np.int32)
         self._ctx = np.zeros(slots, np.int64)   # cached tokens per slot
+        self.injector = injector                # FaultInjector or None
+        self._iters = 0                         # decode iterations served
 
         self._decode = jax.jit(
             lambda p, s, t: transformer.decode_step(p, cfg, s, t))
@@ -222,14 +228,31 @@ class DecodeServer:
             pred = float(self.scorer.prefill_seconds([len(req.prompt)])[0])
         with tracer.span("prefill", predicted_s=pred, rid=req.rid,
                          plen=len(req.prompt), slot=slot):
-            for t in req.prompt:
+            # re-admission after a supervisor eviction resumes from the
+            # generated prefix: feed prompt + already-produced tokens, owe
+            # only the still-missing ones
+            for t in list(req.prompt) + list(req.out):
                 tok = np.zeros((self.slots, 1), np.int32)
                 tok[slot, 0] = t
                 logits, self.state = self._decode(
                     self.params, self.state, jnp.asarray(tok))
         self.active[slot] = req
-        self.remaining[slot] = req.max_new
-        self._ctx[slot] = len(req.prompt)
+        self.remaining[slot] = req.max_new - len(req.out)
+        self._ctx[slot] = len(req.prompt) + len(req.out)
+
+    def evict_slot(self, slot: int) -> Optional[Request]:
+        """Evict ``slot``'s request back to the FRONT of the queue (it has
+        seniority) — the supervisor's degradation primitive.  The request
+        keeps its generated prefix and resumes from it on re-admission."""
+        req = self.active[slot]
+        if req is None:
+            return None
+        req.evictions += 1
+        self.active[slot] = None
+        self.remaining[slot] = 0
+        self._ctx[slot] = 0
+        self.queue.insert(0, req)
+        return req
 
     def _pick(self) -> Optional[int]:
         """Index into ``self.queue`` of the next request to admit, or None
@@ -274,8 +297,10 @@ class DecodeServer:
                     break
                 self._prefill_slot(s, self.queue.pop(i))
 
-    def step(self) -> None:
-        """One decode iteration across all occupied slots."""
+    def step(self) -> float:
+        """One decode iteration across all occupied slots; returns the
+        measured (injector-perturbed, when armed) wall seconds — the
+        supervisor's watchdog currency."""
         tok = np.zeros((self.slots, 1), np.int32)
         for s, req in enumerate(self.active):
             if req is not None:
@@ -294,6 +319,9 @@ class DecodeServer:
                     or self.slo_decode_s is not None:
                 jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
+        if self.injector is not None:
+            dt = self.injector.perturb_decode_time(self._iters, dt)
+        self._iters += 1
         _DECODE_SECONDS.observe(dt)
         if self.slo_decode_s is not None and active \
                 and dt > self.slo_decode_s:
@@ -315,6 +343,7 @@ class DecodeServer:
                 req.done = True
                 self.active[s] = None
                 self._ctx[s] = 0
+        return dt
 
     def run(self, max_iters: int = 10_000) -> List[Request]:
         """Serve until queue + slots drain; returns completed requests."""
@@ -339,7 +368,8 @@ class DecodeServer:
 def simulate_serving(cfg: ArchConfig, prompt_lens: Sequence[int],
                      max_new: int = 32, *, slots: int = 4,
                      max_len: int = 512, policy: str = "model",
-                     model=None, scorer: Optional[AdmissionScorer] = None
+                     model=None, scorer: Optional[AdmissionScorer] = None,
+                     seed: int = 0, noise: float = 0.0
                      ) -> Dict[str, object]:
     """Replay the slot server's schedule with the scorer's predictions as
     the clock: prefills serialize (the example server feeds prompts through
@@ -351,11 +381,21 @@ def simulate_serving(cfg: ArchConfig, prompt_lens: Sequence[int],
     Returns mean/max latency, makespan and the admission order; run with
     ``policy="model"`` and ``policy="fifo"`` (sharing one ``scorer``) to
     compare.
+
+    ``seed``/``noise`` make perturbed replays deterministic (ISSUE 9
+    satellite): with ``noise > 0`` every event duration is scaled by
+    ``exp(noise · z)``, z standard normal from ``default_rng(seed)`` —
+    same seed, same trajectory, every CI run.  ``noise=0`` (default) is
+    the exact predicted-time replay, bit-identical to the pre-seed
+    behavior.
     """
     if policy not in ("fifo", "model"):
         raise ValueError(f"policy must be 'fifo' or 'model', got {policy!r}")
     scorer = scorer or AdmissionScorer(cfg, slots=slots, max_len=max_len,
                                        model=model)
+    rng = np.random.default_rng(seed)
+    jit = (lambda: float(np.exp(noise * rng.standard_normal()))) \
+        if noise > 0.0 else (lambda: 1.0)
     cap = _context_cap(cfg, max_len)
     queue = list(range(len(prompt_lens)))          # rids in arrival order
     lens = [int(l) for l in prompt_lens]
@@ -383,13 +423,13 @@ def simulate_serving(cfg: ArchConfig, prompt_lens: Sequence[int],
                     active=active, cache_tokens=ct)
                 i = int(np.argmin(sc["score_s"]))
             rid = queue.pop(i)
-            t += float(scorer.prefill_seconds([lens[rid]])[0])
+            t += float(scorer.prefill_seconds([lens[rid]])[0]) * jit()
             slot_rid[s], slot_rem[s], slot_ctx[s] = rid, max_new, lens[rid]
             order.append(rid)
         active, ct = occupancy()
         if active == 0:
             break
-        t += float(scorer.decode_step_seconds(active, ct))
+        t += float(scorer.decode_step_seconds(active, ct)) * jit()
         for s in range(slots):
             if slot_rid[s] is None:
                 continue

@@ -63,9 +63,13 @@ class Trainer:
     def __init__(self, cfg: ArchConfig, data_cfg: DataConfig,
                  tc: TrainerConfig, plan: Optional[Plan] = None,
                  predicted_step_s: Optional[float] = None,
-                 calibrator=None):
+                 calibrator=None, injector=None):
         self.cfg = cfg
         self.tc = tc
+        # optional FaultInjector (runtime/faults.py); every hook below is
+        # behind `is not None`, so the hot path is untouched when chaos
+        # is off
+        self.injector = injector
         self.loader = PackedLoader(data_cfg)
         self.optimizer = opt.get_optimizer(cfg.optimizer)
         lr = opt.warmup_cosine(tc.lr, tc.warmup, tc.total_steps)
@@ -102,12 +106,13 @@ class Trainer:
             self._step_pv = predictor.plan_property_vector(
                 cfg, live, plan, {"data": 1})
 
-        # ---- resume ----
+        # ---- resume (newest VALID checkpoint: an invalid one — e.g. a
+        # write the preemption itself interrupted — is quarantined and
+        # the next-older step restored instead of crashing the restart)
         if tc.ckpt_dir:
-            latest = store.latest_step(tc.ckpt_dir)
-            if latest is not None:
-                self.state, _ = store.restore(tc.ckpt_dir, self.state,
-                                              latest)[0], None
+            restored = store.restore_latest_valid(tc.ckpt_dir, self.state)
+            if restored is not None:
+                self.state, _, latest = restored
                 _obs_report.emit("trainer", text=f"resumed from step "
                                                  f"{latest}")
 
@@ -133,6 +138,11 @@ class Trainer:
         tracer = _obs_trace.get_tracer()
         for _ in range(n_steps):
             step = self.step
+            if self.injector is not None:
+                # may corrupt state files or raise DeviceLossError — BEFORE
+                # the step runs, so the supervisor resumes at exactly this
+                # step and batch semantics stay exact
+                self.injector.step_begin(step)
             batch = {k: jnp.asarray(v)
                      for k, v in self.loader.batch(step).items()}
             # the model's prediction for THIS step — the straggler monitor
@@ -144,10 +154,19 @@ class Trainer:
                 self.state, metrics = self.step_fn(self.state, batch)
                 jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
+            if self.injector is not None:
+                # scheduled slowdowns/spikes scale the OBSERVED time: the
+                # monitor, watchdog, histogram and calibrator all see the
+                # same perturbed measurement, as they would a real straggler
+                dt = self.injector.perturb_step_time(step, dt)
             _STEP_SECONDS.observe(dt)
             self.monitor.observe(step, [dt])
             if self.calibrator is not None:
-                ev = self.calibrator.observe(self._step_pv, dt, step=step,
+                sample = dt
+                if self.injector is not None:
+                    sample = self.injector.perturb_telemetry(step, dt)
+                ev = self.calibrator.observe(self._step_pv, sample,
+                                             step=step,
                                              tag="train", phase="train")
                 if ev is not None:
                     # refit already happened inside observe(); re-anchor the

@@ -1,0 +1,597 @@
+"""Chaos-path coverage (ISSUE 9): deterministic fault injection,
+supervised recovery, and the hardened state paths.
+
+The load-bearing guarantees pinned here:
+
+  * seeded fault schedules are reproducible bit-for-bit;
+  * device loss mid-run → elastic replan → checkpoint-restore resume,
+    within a bounded step count, with exact global-batch semantics
+    (per-step history equals the fault-free reference);
+  * an armed-but-EMPTY fault plan runs byte-identical to an
+    unsupervised run — zero recovery events, equal histories;
+  * corrupt registry / checkpoint / compile-cache files recover
+    silently (quarantine + fallback), never surfacing as exceptions;
+  * the streaming calibrator quarantines poisoned samples.
+"""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.calibration import registry, seeds
+from repro.calibration.telemetry import TelemetrySink
+from repro.checkpoint import store
+from repro.configs.registry import ARCHS
+from repro.core import exprops
+from repro.core.fit import RLSState
+from repro.core.model import FutureSchemaError, LinearCostModel
+from repro.core.workload import WorkloadSpec
+from repro.data.pipeline import DataConfig
+from repro.obs import metrics as obs_metrics
+from repro.runtime.faults import (DeviceLossError, Fault, FaultInjector,
+                                  FaultPlan, corrupt_checkpoint,
+                                  corrupt_file)
+from repro.runtime.supervisor import (BackoffPolicy, ServingPolicy,
+                                      ServingSupervisor, Supervisor,
+                                      Watchdog, WatchdogTimeout)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, serialization, grammar
+# ---------------------------------------------------------------------------
+
+
+def test_random_plan_reproducible_bit_for_bit():
+    p1 = FaultPlan.random(seed=7, n_steps=100)
+    p2 = FaultPlan.random(seed=7, n_steps=100)
+    assert p1 == p2
+    assert p1.to_json_dict() == p2.to_json_dict()
+    assert FaultPlan.random(seed=8, n_steps=100) != p1
+
+
+def test_plan_json_roundtrip(tmp_path):
+    p = FaultPlan.random(seed=3, n_steps=50,
+                         kinds=("slowdown", "timing_spike",
+                                "telemetry_nan", "device_loss"))
+    path = str(tmp_path / "plan.json")
+    p.save(path)
+    assert FaultPlan.load(path) == p
+    # parse() accepts a path to a JSON plan too (the CLI contract)
+    assert FaultPlan.parse(path) == p
+
+
+def test_plan_parse_grammar():
+    p = FaultPlan.parse(
+        "corrupt_registry@7;device_loss@12:count=2;"
+        "slowdown@3:factor=8.0,duration=4", seed=5)
+    kinds = [f.kind for f in p.faults]
+    # canonical ordering: by step, then kind rank
+    assert kinds == ["slowdown", "corrupt_registry", "device_loss"]
+    loss = p.faults[2]
+    assert loss.step == 12 and loss.count == 2
+    slow = p.faults[0]
+    assert slow.factor == 8.0 and slow.duration == 4
+    assert p.seed == 5 and bool(p)
+    assert not FaultPlan()
+
+
+def test_plan_rejects_garbage():
+    with pytest.raises(ValueError):
+        Fault(kind="explode", step=1)
+    with pytest.raises(ValueError):
+        Fault(kind="slowdown", step=-1)
+    with pytest.raises(ValueError):
+        FaultPlan.parse("slowdown")          # missing @step
+    with pytest.raises(ValueError):
+        Fault(kind="corrupt_registry", step=0, mode="wat")
+
+
+def test_backoff_sequence_deterministic_and_bounded():
+    b = BackoffPolicy(base_s=0.05, factor=2.0, max_s=1.0, jitter=0.5,
+                      seed=11)
+    s1 = b.sequence(8)
+    s2 = BackoffPolicy(base_s=0.05, factor=2.0, max_s=1.0, jitter=0.5,
+                       seed=11).sequence(8)
+    assert s1 == s2
+    assert all(0.0 <= d <= 1.0 * 1.5 for d in s1)
+    assert BackoffPolicy(seed=12).sequence(8) != s1
+    # sequence() is a pure probe: the live generator is not advanced
+    assert b.delay(0) == BackoffPolicy(seed=11).delay(0)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector hooks
+# ---------------------------------------------------------------------------
+
+
+def test_empty_plan_hooks_are_identity():
+    inj = FaultInjector(FaultPlan())
+    assert not inj.armed()
+    inj.step_begin(0)
+    inj.decode_begin(3)
+    assert inj.perturb_step_time(5, 0.25) == 0.25
+    assert inj.perturb_decode_time(5, 0.25) == 0.25
+    assert inj.perturb_telemetry(5, 0.25) == 0.25
+    assert inj.injected == [] and inj.counts() == {}
+
+
+def test_timing_faults_are_pure_functions_of_step():
+    plan = FaultPlan(faults=(
+        Fault("slowdown", 5, factor=4.0, duration=2),
+        Fault("timing_spike", 9, factor=16.0)))
+    inj = FaultInjector(plan)
+    expect = {4: 1.0, 5: 4.0, 6: 4.0, 7: 1.0, 9: 16.0}
+    for s, f in expect.items():
+        assert inj.perturb_step_time(s, 1.0) == f
+    # idempotent by step: a post-recovery replay sees the same values
+    for s, f in expect.items():
+        assert inj.perturb_step_time(s, 1.0) == f
+    assert inj.counts() == {"slowdown": 2, "timing_spike": 1}
+
+
+def test_device_loss_is_one_shot():
+    inj = FaultInjector(FaultPlan(faults=(Fault("device_loss", 2,
+                                                count=3),)))
+    with pytest.raises(DeviceLossError) as ei:
+        inj.step_begin(2)
+    assert ei.value.count == 3 and ei.value.step == 2
+    inj.step_begin(2)           # replay after resume: does not re-fire
+    assert inj.counts() == {"device_loss": 1}
+
+
+def test_telemetry_poison_at_step():
+    inj = FaultInjector(FaultPlan(faults=(
+        Fault("telemetry_nan", 4, value=float("inf")),)))
+    assert inj.perturb_telemetry(3, 0.5) == 0.5
+    assert inj.perturb_telemetry(4, 0.5) == float("inf")
+    assert inj.perturb_telemetry(5, 0.5) == 0.5
+
+
+def test_corrupt_file_modes(tmp_path):
+    p = str(tmp_path / "f.json")
+    with open(p, "w") as f:
+        f.write(json.dumps({"k": list(range(100))}))
+    size = os.path.getsize(p)
+    assert corrupt_file(p, mode="truncate")
+    assert os.path.getsize(p) == size // 2
+    assert corrupt_file(p, np.random.default_rng(0), mode="garbage")
+    with pytest.raises(ValueError):
+        json.load(open(p))
+    assert not corrupt_file(str(tmp_path / "missing"), mode="truncate")
+
+
+# ---------------------------------------------------------------------------
+# Hardened registry
+# ---------------------------------------------------------------------------
+
+
+def _chaos_model(name="chaos"):
+    m = seeds.ANALYTIC_SEEDS["tpu-v5e"]()
+    return LinearCostModel(keys=list(m.keys), weights=m.weights.copy(),
+                           device=name, meta={})
+
+
+def test_registry_falls_back_to_previous_revision(tmp_path):
+    d = str(tmp_path)
+    m = _chaos_model()
+    registry.register_revision(m, d, name="chaos")
+    registry.register_revision(m, d, name="chaos")
+    path = registry._model_path(d, "chaos")
+    before = obs_metrics.REGISTRY.counter(
+        "repro_registry_fallbacks_total").value(device="chaos")
+    corrupt_file(path, mode="truncate")
+    got = registry.load_model("chaos", d)        # must NOT raise
+    assert got.meta.get("revision") == 1
+    assert os.path.exists(path + ".corrupt")     # quarantined
+    assert not os.path.exists(path)
+    after = obs_metrics.REGISTRY.counter(
+        "repro_registry_fallbacks_total").value(device="chaos")
+    assert after == before + 1
+
+
+def test_registry_corrupt_file_falls_back_to_analytic_seed(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(d, exist_ok=True)
+    with open(registry._model_path(d, "tpu-v5e"), "w") as f:
+        f.write("{not json")
+    got = registry.load_model("tpu-v5e", d)
+    assert got.meta.get("source") == "datasheet-seed"
+
+
+def test_registry_corrupt_without_fallback_raises_unknown(tmp_path):
+    d = str(tmp_path)
+    with open(registry._model_path(d, "mystery"), "w") as f:
+        f.write("{nope")
+    with pytest.raises(registry.UnknownDeviceError):
+        registry.load_model("mystery", d)
+
+
+def test_registry_future_schema_still_raises(tmp_path):
+    # a FUTURE schema is a version problem, not corruption: falling back
+    # would mask the need to upgrade (the CLI depends on the rc=1 path)
+    d = str(tmp_path)
+    fut = _chaos_model().to_json_dict()
+    fut["schema"] = 99
+    os.makedirs(d, exist_ok=True)
+    with open(registry._model_path(d, "future"), "w") as f:
+        json.dump(fut, f)
+    with pytest.raises(FutureSchemaError):
+        registry.load_model("future", d)
+
+
+def test_registry_backups_pruned_and_hidden(tmp_path):
+    d = str(tmp_path)
+    m = _chaos_model()
+    for _ in range(6):
+        registry.register_revision(m, d, name="chaos")
+    backups = registry._revision_backups(d, "chaos")
+    assert len(backups) == registry.KEEP_REVISION_BACKUPS
+    listing = registry.list_models(d)
+    assert "chaos" in listing
+    assert not any(".rev" in name for name in listing)
+
+
+# ---------------------------------------------------------------------------
+# Hardened checkpoint store
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.ones(4, np.float32)}
+
+
+def test_restore_latest_valid_skips_corrupt_newest(tmp_path):
+    ck = str(tmp_path / "ck")
+    tree = _tree()
+    store.save(ck, 5, tree)
+    store.save(ck, 10, tree)
+    corrupt_file(os.path.join(ck, "step_00000010", "leaf_00000.npy"),
+                 np.random.default_rng(0), mode="garbage")
+    out = store.restore_latest_valid(ck, tree)   # must NOT raise
+    assert out is not None and out[2] == 5
+    np.testing.assert_array_equal(out[0]["a"], tree["a"])
+    # the bad checkpoint is quarantined out of latest_step's view
+    assert os.path.isdir(os.path.join(ck, "quarantine", "step_00000010"))
+    assert store.latest_step(ck) == 5
+
+
+def test_restore_latest_valid_truncated_manifest(tmp_path):
+    ck = str(tmp_path / "ck")
+    tree = _tree()
+    store.save(ck, 3, tree)
+    corrupt_file(os.path.join(ck, "step_00000003", "manifest.json"),
+                 mode="truncate")
+    assert store.restore_latest_valid(ck, tree) is None
+    assert store.restore_latest_valid(str(tmp_path / "none"), tree) is None
+
+
+def test_restore_error_still_catchable_as_assertion(tmp_path):
+    # CheckpointError subclasses AssertionError: pre-hardening callers
+    # (and tests) catching the old bare asserts keep working
+    ck = str(tmp_path / "ck")
+    tree = _tree()
+    store.save(ck, 7, tree)
+    corrupt_file(os.path.join(ck, "step_00000007", "leaf_00000.npy"),
+                 np.random.default_rng(1), mode="garbage")
+    with pytest.raises(AssertionError, match="corrupt"):
+        store.restore(ck, tree, 7)
+    assert issubclass(store.CheckpointError, AssertionError)
+
+
+def test_corrupt_checkpoint_helper_targets_newest(tmp_path):
+    ck = str(tmp_path / "ck")
+    store.save(ck, 2, _tree())
+    store.save(ck, 4, _tree())
+    target = corrupt_checkpoint(ck, mode="truncate")
+    assert target is not None and "step_00000004" in target
+    assert corrupt_checkpoint(str(tmp_path / "empty")) is None
+
+
+# ---------------------------------------------------------------------------
+# Calibration quarantine (RLS + telemetry sink)
+# ---------------------------------------------------------------------------
+
+
+def test_rls_quarantines_poisoned_samples():
+    r = RLSState(["a", "b"])
+    assert r.observe({"a": 1.0, "b": 2.0}, float("nan")) is False
+    assert r.observe({"a": 1.0, "b": 2.0}, 0.0) is False
+    assert r.observe({"a": 1.0, "b": 2.0}, -1.0) is False
+    assert r.observe({"a": float("inf"), "b": 2.0}, 1.0) is False
+    assert r.n_quarantined == 4 and r.n_samples == 0
+    assert r.observe({"a": 1.0, "b": 2.0}, 0.5) is True
+    assert r.n_samples == 1
+    # strict batch path unchanged
+    with pytest.raises(ValueError):
+        r.row({"a": 1.0}, -1.0)
+
+
+def test_telemetry_sink_rejects_nonfinite():
+    sink = TelemetrySink(capacity=8)
+    assert sink.record({"a": 1.0}, float("inf")) is None
+    assert sink.record({"a": 1.0}, float("nan")) is None
+    assert sink.record({"a": float("nan")}, 1.0) is None
+    assert sink.n_recorded == 0 and sink.n_dropped == 3
+    assert sink.record({"a": 1.0}, 0.5) == 0
+
+
+# ---------------------------------------------------------------------------
+# Compile cache: corrupt entries are misses (and get quarantined)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_corrupt_entry_rebuilds(tmp_path, monkeypatch):
+    from repro.core.symcount import Var
+    monkeypatch.setenv("REPRO_COMPILE_CACHE", str(tmp_path))
+    calls = []
+
+    def builder():
+        calls.append(1)
+        return {"p": Var("x") * 3 + 1}
+
+    key = exprops.program_key("chaos-test-program", "v1")
+    exprops.load_or_build(key, builder)
+    path = os.path.join(exprops.compile_cache_dir(), f"{key}.json")
+    assert os.path.exists(path)
+    corrupt_file(path, mode="truncate")
+    errors_before = exprops.DISK_STATS["errors"]
+    prog = exprops.load_or_build(key, builder)   # must NOT raise
+    assert len(calls) == 2                       # treated as a miss
+    assert exprops.DISK_STATS["errors"] == errors_before + 1
+    model = LinearCostModel.from_dict({"p": 2.0})
+    env = {"x": np.arange(1, 3, dtype=np.int64)}
+    got = exprops.score_cells(prog, env, 2, model)
+    np.testing.assert_allclose(got, 2.0 * (np.arange(1, 3) * 3 + 1))
+    # the rebuilt entry is valid again and the corrupt one quarantined
+    assert os.path.exists(path)
+    assert os.path.exists(path + ".corrupt")
+    exprops.load_or_build(key, builder)
+    assert len(calls) == 2
+
+
+# ---------------------------------------------------------------------------
+# Watchdog ladder
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_ladder_and_rescale():
+    w = Watchdog(k=3.0, warmup=2)
+    for _ in range(5):
+        action, _ = w.observe(0.1)
+        assert action is None
+    assert w.observe(1.0)[0] == "report"
+    assert w.observe(1.0)[0] == "rescale"
+    assert w.observe(1.0)[0] == "replan"
+    assert w.observe(1.0)[0] == "replan"     # stays on the top rung
+    w.reset()
+    assert w.breaches == 0 and w.n == 0
+    k0 = w.k
+    assert w.rescale() == k0 * 2.0
+    assert Watchdog(k=60.0, max_k=64.0).rescale() == 64.0   # bounded
+
+
+def test_watchdog_warmup_never_breaches():
+    w = Watchdog(k=2.0, warmup=2)
+    # the jit-compile first step is enormous; warmup must swallow it
+    assert w.observe(60.0)[0] is None
+    assert w.observe(0.1)[0] is None
+
+
+# ---------------------------------------------------------------------------
+# Supervised trainer e2e
+# ---------------------------------------------------------------------------
+
+_ARCH = "smollm-360m"
+_TOTAL = 14
+
+
+def _trainer_cfgs(ckpt_dir):
+    cfg = ARCHS[_ARCH].reduced()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4,
+                    seed=5)
+    tc = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=5,
+                       total_steps=_TOTAL, seed=0, log_every=1000)
+    return cfg, dc, tc
+
+
+@pytest.fixture(scope="module")
+def reference_history(tmp_path_factory):
+    """The fault-free unsupervised run every chaos run must reproduce."""
+    ck = str(tmp_path_factory.mktemp("ref-ckpt"))
+    cfg, dc, tc = _trainer_cfgs(ck)
+    return Trainer(cfg, dc, tc).train(_TOTAL)
+
+
+def _fast_backoff():
+    return BackoffPolicy(base_s=0.0, factor=2.0, max_s=0.0, jitter=0.0,
+                         seed=2)
+
+
+def test_device_loss_replan_resume_exact(tmp_path, reference_history):
+    ck = str(tmp_path / "chaos-ckpt")
+    cfg, dc, tc = _trainer_cfgs(ck)
+    inj = FaultInjector(FaultPlan(faults=(Fault("device_loss", 9),),
+                                  seed=1), ckpt_dir=ck)
+    wl = WorkloadSpec(phase="train", global_batch=4, seq_len=64,
+                      name="chaos")
+    sup = Supervisor(lambda mesh: Trainer(cfg, dc, tc, injector=inj),
+                     _TOTAL, cfg=ARCHS[_ARCH], workload=wl, n_devices=8,
+                     injector=inj, backoff=_fast_backoff(),
+                     sleep=lambda s: None)
+    hist = sup.run()
+
+    assert len(sup.recoveries) == 1
+    rec = sup.recoveries[0]
+    assert rec.cause == "device_loss" and rec.action == "replan"
+    assert rec.mttr_s > 0 and sup.mttr_s() == rec.mttr_s
+    # power-of-two survivor fallback: 8 - 1 lost -> best mesh over 4
+    assert sup.n_devices == 7
+    assert sup.mesh is not None
+    assert int(np.prod(list(sup.mesh.shape.values()))) == 4
+    # bounded recovery: at most one checkpoint interval of replay
+    assert sup.steps_run <= _TOTAL + tc.ckpt_every
+
+    # exact global-batch semantics: per-step history matches the
+    # fault-free reference (replays collapsed last-write-wins)
+    assert [h["step"] for h in hist] == \
+        [h["step"] for h in reference_history]
+    for h, r in zip(hist, reference_history):
+        np.testing.assert_allclose(h["loss"], r["loss"], rtol=1e-5)
+        np.testing.assert_allclose(h["grad_norm"], r["grad_norm"],
+                                   rtol=1e-4)
+
+
+def test_empty_plan_supervised_run_is_identical(tmp_path,
+                                                reference_history):
+    ck = str(tmp_path / "clean-ckpt")
+    cfg, dc, tc = _trainer_cfgs(ck)
+    inj = FaultInjector(FaultPlan(), ckpt_dir=ck)
+    sup = Supervisor(lambda mesh: Trainer(cfg, dc, tc, injector=inj),
+                     _TOTAL, injector=inj, sleep=lambda s: None)
+    hist = sup.run()
+    assert sup.recoveries == [] and sup.steps_run == _TOTAL
+    assert inj.injected == []
+    # byte-identical step outputs: exact equality, not approx
+    assert [(h["step"], h["loss"], h["grad_norm"], h["lr"])
+            for h in hist] == \
+        [(h["step"], h["loss"], h["grad_norm"], h["lr"])
+         for h in reference_history]
+
+
+def test_corrupt_checkpoint_resume_is_silent(tmp_path, reference_history):
+    # corrupt the newest checkpoint mid-run AND lose a device right
+    # after: the rebuild must fall back to the older checkpoint without
+    # any exception surfacing
+    ck = str(tmp_path / "ckpt-chaos")
+    cfg, dc, tc = _trainer_cfgs(ck)
+    plan = FaultPlan(faults=(Fault("corrupt_checkpoint", 12,
+                                   mode="garbage"),
+                             Fault("device_loss", 12)), seed=4)
+    inj = FaultInjector(plan, ckpt_dir=ck)
+    sup = Supervisor(lambda mesh: Trainer(cfg, dc, tc, injector=inj),
+                     _TOTAL, injector=inj, backoff=_fast_backoff(),
+                     sleep=lambda s: None)
+    hist = sup.run()
+    assert len(sup.recoveries) == 1
+    # step-10 checkpoint was corrupted, so resume fell back to step 5
+    assert os.path.isdir(os.path.join(ck, "quarantine", "step_00000010"))
+    for h, r in zip(hist, reference_history):
+        np.testing.assert_allclose(h["loss"], r["loss"], rtol=1e-5)
+
+
+def test_recovery_budget_bounds_runaway(tmp_path):
+    ck = str(tmp_path / "budget-ckpt")
+    cfg, dc, tc = _trainer_cfgs(ck)
+
+    class AlwaysLoses:
+        """Injector stub whose every segment dies at its first step."""
+        def step_begin(self, step):
+            raise DeviceLossError(1, step)
+
+    sup = Supervisor(
+        lambda mesh: Trainer(cfg, dc, tc, injector=AlwaysLoses()),
+        _TOTAL, backoff=_fast_backoff(), max_recoveries=2,
+        sleep=lambda s: None)
+    with pytest.raises(RuntimeError, match="recovery budget"):
+        sup.run()
+    assert len(sup.recoveries) == 2
+
+
+# ---------------------------------------------------------------------------
+# Serving degradation e2e
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.models import transformer
+    cfg = ARCHS[_ARCH].reduced()
+    params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _submit(server, cfg, n, max_new=8):
+    from repro.runtime.server import Request
+    rng = np.random.default_rng(0)
+    for rid in range(n):
+        prompt = rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+        server.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+
+
+def test_serving_evicts_sheds_and_completes(serve_setup):
+    from repro.runtime.server import DecodeServer
+    cfg, params = serve_setup
+    # a long, enormous slowdown window: consecutive watchdog breaches
+    # must evict, throttle, and still finish every non-shed request
+    plan = FaultPlan(faults=(Fault("slowdown", 3, factor=1e5,
+                                   duration=40),))
+    inj = FaultInjector(plan)
+    srv = DecodeServer(cfg, params, slots=2, max_len=128, seed=0,
+                       injector=inj)
+    _submit(srv, cfg, 6)
+    sup = ServingSupervisor(srv, ServingPolicy(watchdog_k=4.0,
+                                               max_queue=3),
+                            injector=inj)
+    done = sup.run(max_iters=500)
+    assert sup.evictions >= 1
+    assert len(sup.shed) >= 1
+    for r in sup.shed:
+        assert r.shed and r.retry_after_s == 1.0
+    # every completed request got its full token budget — including any
+    # that were evicted and re-admitted mid-stream
+    assert all(len(r.out) == 8 and not r.shed for r in done)
+    assert len(done) + len(sup.shed) == 6
+
+
+def test_serving_clean_run_no_degradation(serve_setup):
+    from repro.runtime.server import DecodeServer
+    cfg, params = serve_setup
+    srv = DecodeServer(cfg, params, slots=2, max_len=128, seed=0,
+                       injector=FaultInjector(FaultPlan()))
+    _submit(srv, cfg, 4)
+    sup = ServingSupervisor(srv, ServingPolicy(watchdog_k=50.0))
+    done = sup.run(max_iters=500)
+    assert len(done) == 4 and sup.evictions == 0 and sup.shed == []
+
+
+def test_evicted_request_resumes_from_prefix(serve_setup):
+    from repro.runtime.server import DecodeServer, Request
+    cfg, params = serve_setup
+    srv = DecodeServer(cfg, params, slots=1, max_len=128, seed=0)
+    req = Request(rid=0, prompt=np.asarray([5, 6, 7], np.int32),
+                  max_new=6)
+    srv.submit(req)
+    srv._refill()
+    srv.step()
+    srv.step()
+    produced = list(req.out)
+    assert len(produced) == 2
+    evicted = srv.evict_slot(0)
+    assert evicted is req and req.evictions == 1
+    assert srv.queue[0] is req and srv.active[0] is None
+    srv._refill()                      # re-admit: prefix is replayed
+    assert srv.remaining[0] == 4       # owes only the missing tokens
+    while not req.done:
+        srv.step()
+    assert req.out[:2] == produced and len(req.out) <= 6
+
+
+def test_simulate_serving_seeded_noise_deterministic(serve_setup):
+    from repro.runtime.server import simulate_serving
+    cfg, _ = serve_setup
+    kw = dict(slots=2, policy="model")
+    a = simulate_serving(cfg, [8, 16, 4, 12], seed=3, noise=0.2, **kw)
+    b = simulate_serving(cfg, [8, 16, 4, 12], seed=3, noise=0.2, **kw)
+    c = simulate_serving(cfg, [8, 16, 4, 12], seed=4, noise=0.2, **kw)
+    assert a == b
+    assert a["makespan_s"] != c["makespan_s"]
+    # default (noise=0) stays the exact predicted-time replay
+    d1 = simulate_serving(cfg, [8, 16, 4, 12], **kw)
+    d2 = simulate_serving(cfg, [8, 16, 4, 12], seed=9, **kw)
+    assert d1 == d2 and d1["n_done"] == 4

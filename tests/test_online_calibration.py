@@ -115,8 +115,14 @@ def test_rls_validates_inputs():
     with pytest.raises(ValueError, match="forgetting"):
         fit.RLSState.init(["a"], lam=0.0)
     rls = fit.RLSState.init(["a"])
+    # the strict row constructor still raises...
     with pytest.raises(ValueError, match="non-positive"):
-        rls.observe({"a": 1.0}, 0.0)
+        rls.row({"a": 1.0}, 0.0)
+    # ...but the streaming path QUARANTINES a poisoned sample instead of
+    # letting one clock glitch kill a live calibrator (tests/test_faults.py
+    # covers the full quarantine contract)
+    assert rls.observe({"a": 1.0}, 0.0) is False
+    assert rls.n_quarantined == 1 and rls.n_samples == 0
 
 
 def test_refit_strictly_reduces_windowed_error_on_drift(make_drift_stream):
