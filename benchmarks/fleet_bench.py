@@ -1,0 +1,128 @@
+"""Fleet churn-replan benchmark → repo-root ``BENCH_fleet.json``.
+
+Times the three latencies the churn-tolerant fleet story rests on:
+
+  * **cold allocate** — pricing the full (job × pool × count × plan ×
+    mesh) space of the demo manifest from empty ``BasisCache``s;
+  * **warm fleet replan** — the ``FleetSupervisor`` degradation-ladder
+    repair after a ``pool_shrink``, re-scoring against the caches the
+    allocation warmed (the latency a live churn event actually pays);
+  * **single-job warm replan** — the PR 8 baseline (one
+    ``elastic.replan`` warm rescore, ~0.4 ms), measured in-process so
+    the bar is robust to CI machine speed.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench \
+        [--repeats 5] [--out BENCH_fleet.json]
+
+Acceptance bars (CI fails the smoke when either is missed):
+  * ``warm_replan_s <= 10 × single_warm_replan_s`` — fleet-wide churn
+    repair stays within one order of magnitude of a single job's warm
+    replan;
+  * ``cache_reuse >= 0.5`` — at least half the basis columns a warm
+    fleet replan touches come back from the allocation-warmed caches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.calibration import registry
+from repro.configs.registry import ARCHS
+from repro.core import exprops
+from repro.distributed import elastic
+from repro.launch.fleet import FleetAllocator, demo_manifest
+from repro.runtime.fleet_supervisor import FleetSupervisor, SimJobRunner
+
+
+def time_fn(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--registry", default=None, metavar="DIR")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    manifest = demo_manifest()
+
+    # ---- cold allocate: fresh allocator, empty caches -------------------
+    t0 = time.perf_counter()
+    allocator = FleetAllocator(manifest, registry_dir=args.registry)
+    assignment = allocator.allocate()
+    cold_allocate_s = time.perf_counter() - t0
+    print(f"cold allocate: {len(assignment.placements)} jobs across "
+          f"{len(manifest.pools)} pools in {cold_allocate_s*1e3:.2f} ms")
+
+    # ---- warm fleet replan: the supervisor's pool_shrink repair ---------
+    # each repeat rebuilds the supervisor on a fresh allocation (warm
+    # caches) and times ONE ladder repair of a 2-device a100 shrink
+    def one_repair() -> float:
+        sup = FleetSupervisor(allocator,
+                              runner_factory=SimJobRunner.factory(),
+                              assignment=allocator.allocate())
+        sup.capacity["a100"] -= 2
+        t = time.perf_counter()
+        sup._repair_pool("a100", step=2, kind="pool_shrink")
+        return time.perf_counter() - t
+
+    one_repair()                         # first repair may still miss
+    h0, m0 = (allocator.cache_stats()["hits"],
+              allocator.cache_stats()["misses"])
+    warm_replan_s = min(one_repair() for _ in range(args.repeats))
+    stats = allocator.cache_stats()
+    dh, dm = stats["hits"] - h0, stats["misses"] - m0
+    cache_reuse = dh / (dh + dm) if (dh + dm) else 1.0
+    print(f"warm fleet replan: {warm_replan_s*1e3:.3f} ms "
+          f"(cache reuse {cache_reuse*100:.1f}%: +{dh} hits / +{dm} "
+          f"misses over {args.repeats} repairs)")
+
+    # ---- single-job warm replan baseline (PR 8's ~0.4 ms) ---------------
+    job = manifest.jobs[0]
+    cfg = ARCHS[job.arch]
+    model = registry.load_model(manifest.pools[0].device, args.registry)
+    cache = exprops.BasisCache(maxsize=4096)
+    elastic.replan(cfg, job.workload, 8, model, cache=cache)   # warm it
+    single_warm_replan_s = time_fn(
+        lambda: elastic.replan(cfg, job.workload, 8, model, cache=cache),
+        args.repeats)
+    ratio = warm_replan_s / single_warm_replan_s
+    print(f"single-job warm replan: {single_warm_replan_s*1e3:.3f} ms "
+          f"-> fleet/single ratio {ratio:.1f}x (bar: <= 10x)")
+
+    result = {
+        "benchmark": "fleet_bench",
+        "manifest": manifest.name,
+        "jobs": len(manifest.jobs),
+        "pools": len(manifest.pools),
+        "repeats": args.repeats,
+        "cold_allocate_s": cold_allocate_s,
+        "warm_replan_s": warm_replan_s,
+        "single_warm_replan_s": single_warm_replan_s,
+        "warm_over_single_ratio": ratio,
+        "ratio_bar": 10.0,
+        "cache_reuse": cache_reuse,
+        "cache_reuse_bar": 0.5,
+    }
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+    if ratio > 10.0:
+        print("WARNING: warm fleet replan above the 10x single-job bar")
+    if cache_reuse < 0.5:
+        print("WARNING: BasisCache reuse below the 50% bar")
+    return result
+
+
+if __name__ == "__main__":
+    main()

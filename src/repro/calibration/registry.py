@@ -168,21 +168,18 @@ def _analytic_seed(device: str) -> Optional[LinearCostModel]:
     return model
 
 
-def load_model(device: str, registry_dir: Optional[str] = None
-               ) -> LinearCostModel:
-    """Load the model for ``device``: fitted registry file first, then the
-    built-in analytic seeds.  Raises ``UnknownDeviceError`` otherwise.
-
-    Hardened against corruption (ISSUE 9): a truncated/garbled active
-    file is quarantined as ``*.corrupt`` and the load falls back to the
-    newest valid revision backup (written by ``register_revision``), then
-    the analytic seed — counted in ``repro_registry_fallbacks_total``.
-    A FUTURE schema re-raises (an upgrade problem, not corruption)."""
+def _load_hardened(device: str, registry_dir: Optional[str] = None
+                   ) -> Tuple[LinearCostModel, Optional[str]]:
+    """``load_model`` plus provenance: returns ``(model, fellback)`` where
+    ``fellback`` is ``None`` on a clean load (fitted file or plain analytic
+    seed) and ``"backup"``/``"seed"`` when a corrupt active file was
+    quarantined and the load degraded — what ``load_models`` rolls up so a
+    fleet caller can see at a glance which pools run on degraded models."""
     registry_dir = registry_dir or default_registry_dir()
     path = _model_path(registry_dir, device)
     if os.path.exists(path):
         try:
-            return LinearCostModel.load(path)
+            return LinearCostModel.load(path), None
         except FutureSchemaError:
             raise
         except (OSError, ValueError, KeyError, TypeError) as exc:
@@ -202,11 +199,52 @@ def load_model(device: str, registry_dir: Optional[str] = None
                     "device": device, "action": "fallback",
                     "revision": model.meta.get("revision", "?")},
                     text=f"recovered from backup {os.path.basename(bpath)}")
-                return model
+                return model, "backup"
+            model = _analytic_seed(device)
+            if model is not None:
+                return model, "seed"
+            raise UnknownDeviceError(device, list_models(registry_dir))
     model = _analytic_seed(device)
     if model is not None:
-        return model
+        return model, None
     raise UnknownDeviceError(device, list_models(registry_dir))
+
+
+def load_model(device: str, registry_dir: Optional[str] = None
+               ) -> LinearCostModel:
+    """Load the model for ``device``: fitted registry file first, then the
+    built-in analytic seeds.  Raises ``UnknownDeviceError`` otherwise.
+
+    Hardened against corruption (ISSUE 9): a truncated/garbled active
+    file is quarantined as ``*.corrupt`` and the load falls back to the
+    newest valid revision backup (written by ``register_revision``), then
+    the analytic seed — counted in ``repro_registry_fallbacks_total``.
+    A FUTURE schema re-raises (an upgrade problem, not corruption)."""
+    return _load_hardened(device, registry_dir)[0]
+
+
+def load_models(names, registry_dir: Optional[str] = None
+                ) -> Dict[str, LinearCostModel]:
+    """Batch loader for a heterogeneous fleet: one hardened ``load_model``
+    per distinct name, plus ONE ``[registry]`` rollup line naming which
+    devices fell back (quarantined active file recovered from a revision
+    backup or the analytic seed).  A corrupt model for one device type
+    therefore degrades only that pool's placements — the other models load
+    clean and the caller learns exactly which pool is priced on stale
+    weights.  Unknown devices still raise ``UnknownDeviceError``: a pool
+    naming a device nobody can price is a manifest error, not churn."""
+    models: Dict[str, LinearCostModel] = {}
+    fellback = []
+    for name in dict.fromkeys(names):
+        model, fb = _load_hardened(name, registry_dir)
+        models[name] = model
+        if fb:
+            fellback.append(f"{name}:{fb}")
+    _obs_report.emit("registry", {
+        "loaded": len(models),
+        "fallbacks": ",".join(fellback) or "none"},
+        text="batch load")
+    return models
 
 
 def list_models(registry_dir: Optional[str] = None) -> Dict[str, str]:

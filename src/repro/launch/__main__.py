@@ -1,0 +1,40 @@
+"""Subcommand dispatcher: ``python -m repro.launch <cmd> …``.
+
+    python -m repro.launch fleet --manifest demo --steps 12
+    python -m repro.launch train --arch smollm-360m --reduced …
+
+Each subcommand is the ``main()`` of the matching ``repro.launch``
+module; the per-module entry points (``python -m repro.launch.train``)
+keep working unchanged.
+"""
+from __future__ import annotations
+
+import sys
+
+_COMMANDS = ("fleet", "train", "serve", "autoshard", "dryrun")
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__.strip())
+        print(f"\ncommands: {', '.join(_COMMANDS)}")
+        raise SystemExit(0 if argv else 2)
+    cmd, rest = argv[0], argv[1:]
+    if cmd not in _COMMANDS:
+        print(f"unknown command {cmd!r}; expected one of "
+              f"{', '.join(_COMMANDS)}", file=sys.stderr)
+        raise SystemExit(2)
+    if cmd == "fleet":
+        # the only main() taking argv directly — the others parse sys.argv
+        from repro.launch.fleet import main as run
+        run(rest)
+        return
+    import importlib
+    mod = importlib.import_module(f"repro.launch.{cmd}")
+    sys.argv = [f"repro.launch.{cmd}"] + rest
+    mod.main()
+
+
+if __name__ == "__main__":
+    main()

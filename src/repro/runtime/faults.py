@@ -67,11 +67,18 @@ FAULT_KINDS = (
     "corrupt_registry",       # registry model file truncated/garbaged
     "corrupt_checkpoint",     # newest checkpoint manifest/leaf corrupted
     "corrupt_compile_cache",  # every disk compile-cache entry corrupted
+    "pool_shrink",            # fleet: pool=NAME loses count devices at step N
+    "pool_grow",              # fleet: pool=NAME gains count devices at step N
 )
 
 _FILE_KINDS = ("corrupt_registry", "corrupt_checkpoint",
                "corrupt_compile_cache")
 _TIMING_KINDS = ("slowdown", "timing_spike")
+#: fleet-scoped churn kinds: consumed by ``FleetSupervisor.fleet_events``,
+#: never by the per-trainer ``step_begin`` hook.  A ``device_loss`` with
+#: ``pool=`` set is fleet-scoped too — it names WHICH pool lost the
+#: devices, which only the fleet layer can act on.
+_POOL_KINDS = ("pool_shrink", "pool_grow")
 
 
 class DeviceLossError(RuntimeError):
@@ -96,12 +103,13 @@ class Fault:
 
     kind: str
     step: int
-    count: int = 1                    # device_loss: devices lost
+    count: int = 1                    # device_loss / pool_*: devices moved
     factor: float = 4.0               # slowdown / timing_spike multiplier
     duration: int = 1                 # slowdown window length, in steps
     value: float = float("nan")       # telemetry_nan poison value
     mode: str = "truncate"            # file corruption: truncate | garbage
     target: Optional[str] = None      # file corruption: explicit path
+    pool: Optional[str] = None        # fleet faults: the device pool hit
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -112,13 +120,26 @@ class Fault:
         if self.mode not in ("truncate", "garbage"):
             raise ValueError(f"fault mode must be truncate|garbage: "
                              f"{self.mode!r}")
+        if self.pool is not None and self.kind not in _POOL_KINDS \
+                and self.kind != "device_loss":
+            raise ValueError(f"pool= only applies to {_POOL_KINDS} "
+                             f"and device_loss, not {self.kind!r}")
+
+    @property
+    def fleet_scoped(self) -> bool:
+        """True for pool-churn faults the ``FleetSupervisor`` consumes
+        (``pool_shrink``/``pool_grow``, and ``device_loss`` carrying a
+        ``pool=`` attribution)."""
+        return self.kind in _POOL_KINDS or \
+            (self.kind == "device_loss" and self.pool is not None)
 
     def _key(self):
         # repr() makes nan compare equal to nan — a plan carrying a NaN
         # poison value must still be a value object (tests pin that equal
         # seeds build EQUAL plans)
         return (self.kind, self.step, self.count, repr(self.factor),
-                self.duration, repr(self.value), self.mode, self.target)
+                self.duration, repr(self.value), self.mode, self.target,
+                self.pool)
 
     def __eq__(self, other):
         return isinstance(other, Fault) and self._key() == other._key()
@@ -130,7 +151,8 @@ class Fault:
     def to_json_dict(self) -> Dict[str, object]:
         d: Dict[str, object] = {"kind": self.kind, "step": self.step}
         defaults = Fault(kind=self.kind, step=self.step)
-        for f in ("count", "factor", "duration", "value", "mode", "target"):
+        for f in ("count", "factor", "duration", "value", "mode", "target",
+                  "pool"):
             v = getattr(self, f)
             dv = getattr(defaults, f)
             if v != dv and not (isinstance(v, float) and isinstance(dv, float)
@@ -141,7 +163,7 @@ class Fault:
     @classmethod
     def from_json_dict(cls, d: Mapping[str, object]) -> "Fault":
         kw = {k: d[k] for k in ("count", "factor", "duration", "value",
-                                "mode", "target") if k in d}
+                                "mode", "target", "pool") if k in d}
         return cls(kind=str(d["kind"]), step=int(d["step"]), **kw)
 
 
@@ -200,7 +222,10 @@ class FaultPlan:
             kw: Dict[str, object] = {}
             for kv in filter(None, (x.strip() for x in kvs.split(","))):
                 k, _, v = kv.partition("=")
-                kw[k.strip()] = _parse_scalar(v.strip())
+                k = k.strip()
+                if k == "k":          # fleet shorthand: pool_shrink@5:k=2
+                    k = "count"
+                kw[k] = _parse_scalar(v.strip())
             faults.append(Fault(kind=kind.strip(), step=int(step), **kw))
         return cls(faults=tuple(faults), seed=seed)
 
@@ -341,8 +366,13 @@ class FaultInjector:
         self._telemetry = [(i, f) for i, f in enumerate(plan.faults)
                            if f.kind == "telemetry_nan"]
         self._oneshot: Dict[int, List[Tuple[int, Fault]]] = {}
+        self._fleet: Dict[int, List[Tuple[int, Fault]]] = {}
         for i, f in enumerate(plan.faults):
-            if f.kind in _FILE_KINDS or f.kind == "device_loss":
+            if f.fleet_scoped:
+                # pool churn is the fleet supervisor's to consume; the
+                # per-trainer step hook must never raise it
+                self._fleet.setdefault(f.step, []).append((i, f))
+            elif f.kind in _FILE_KINDS or f.kind == "device_loss":
                 self._oneshot.setdefault(f.step, []).append((i, f))
 
     def armed(self) -> bool:
@@ -391,6 +421,25 @@ class FaultInjector:
     def decode_begin(self, it: int) -> None:
         """Serving-side twin of ``step_begin`` (iteration-indexed)."""
         self.step_begin(it)
+
+    def fleet_events(self, step: int) -> List[Fault]:
+        """Fleet-scoped pool-churn faults due at ``step`` (``pool_shrink``,
+        ``pool_grow``, pool-attributed ``device_loss``), fired one-shot and
+        returned in plan order for the ``FleetSupervisor`` to apply.  An
+        empty plan (or a step with no churn) returns ``[]`` without any
+        bookkeeping — the supervised fleet loop pays one dict probe."""
+        due = self._fleet.get(step)
+        if not due:
+            return []
+        out: List[Fault] = []
+        for i, f in due:
+            if i in self._fired:
+                continue
+            self._fired.add(i)
+            detail = f"pool={f.pool or '<first>'},k={f.count}"
+            self._record(step, f, detail=detail)
+            out.append(f)
+        return out
 
     def _corrupt(self, step: int, f: Fault) -> None:
         detail = ""

@@ -89,6 +89,19 @@ def test_plan_rejects_garbage():
         FaultPlan.parse("slowdown")          # missing @step
     with pytest.raises(ValueError):
         Fault(kind="corrupt_registry", step=0, mode="wat")
+    with pytest.raises(ValueError):
+        Fault(kind="timing_spike", step=1, pool="a100")   # pool= is
+        # reserved for fleet-scoped kinds (and pool-tagged device_loss)
+
+
+def test_plan_parse_pool_grammar():
+    p = FaultPlan.parse("pool_shrink@5:pool=a100,k=2;pool_grow@9:pool=v5e",
+                        seed=5)
+    shrink, grow = p.faults
+    assert (shrink.kind, shrink.pool, shrink.count) == \
+        ("pool_shrink", "a100", 2)
+    assert grow.pool == "v5e" and grow.fleet_scoped
+    assert FaultPlan.from_json_dict(p.to_json_dict()) == p
 
 
 def test_backoff_sequence_deterministic_and_bounded():

@@ -1,0 +1,450 @@
+"""Churn-tolerant heterogeneous fleet (ISSUE 10).
+
+The load-bearing guarantees pinned here:
+
+  * the ``FaultPlan`` grammar speaks fleet-scoped pool churn
+    (``pool_shrink@5:pool=a100,k=2`` / ``pool_grow`` / pool-attributed
+    ``device_loss``) and those faults NEVER leak into the per-trainer
+    ``step_begin`` hook;
+  * ``registry.load_models`` batch-loads per-device models with the
+    hardened per-device fallback, degrading only the corrupt pool;
+  * ``elastic.replan``/``on_failure`` accept a heterogeneous pool
+    descriptor, with the int signature bit-identical to the 1-pool case;
+  * same manifest + same ``FaultPlan`` seed ⇒ byte-identical placement
+    history; an EMPTY fleet plan ⇒ placements identical to the bare
+    allocator;
+  * the degradation ladder replans → migrates → shrinks → pauses, with
+    hysteresis against rebalance thrash;
+  * a migrated training job's checkpoint handoff resumes with exact
+    batch semantics: final history ≡ the fault-free run at rtol 1e-5.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.calibration import registry, seeds
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.core.model import LinearCostModel
+from repro.core.workload import WorkloadSpec
+from repro.data.pipeline import DataConfig
+from repro.distributed import elastic
+from repro.launch.fleet import (FleetAllocator, JobSpec, Manifest,
+                                Placement, PoolSpec, demo_manifest,
+                                load_manifest)
+from repro.runtime.faults import (Fault, FaultInjector, FaultPlan,
+                                  corrupt_file)
+from repro.runtime.fleet_supervisor import (FleetSupervisor, SimJobRunner,
+                                            TrainerJobRunner)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+_ARCH = "smollm-360m"
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scoped fault grammar
+# ---------------------------------------------------------------------------
+
+
+def test_pool_fault_grammar_and_roundtrip(tmp_path):
+    p = FaultPlan.parse(
+        "pool_shrink@5:pool=a100,k=2;pool_grow@9:pool=v5e,count=4;"
+        "device_loss@7:pool=h100", seed=7)
+    shrink, loss, grow = p.faults
+    assert (shrink.kind, shrink.step, shrink.pool, shrink.count) == \
+        ("pool_shrink", 5, "a100", 2)          # k= aliases count=
+    assert (grow.kind, grow.pool, grow.count) == ("pool_grow", "v5e", 4)
+    assert loss.pool == "h100" and loss.fleet_scoped
+    assert shrink.fleet_scoped and grow.fleet_scoped
+    assert not Fault("device_loss", 7).fleet_scoped
+    path = str(tmp_path / "plan.json")
+    p.save(path)
+    assert FaultPlan.load(path) == p
+    with pytest.raises(ValueError):
+        Fault(kind="slowdown", step=1, pool="a100")   # pool= is fleet-only
+
+
+def test_fleet_events_one_shot_and_trainer_isolation():
+    plan = FaultPlan.parse(
+        "pool_shrink@3:pool=a100,k=2;device_loss@3:pool=a100;"
+        "device_loss@5", seed=0)
+    inj = FaultInjector(plan)
+    # fleet-scoped churn must NOT raise from the per-trainer hook …
+    inj.step_begin(3)
+    evs = inj.fleet_events(3)
+    assert sorted(f.kind for f in evs) == ["device_loss", "pool_shrink"]
+    assert inj.fleet_events(3) == []            # one-shot
+    # … while an unattributed device_loss still does
+    from repro.runtime.faults import DeviceLossError
+    with pytest.raises(DeviceLossError):
+        inj.step_begin(5)
+    assert inj.fleet_events(5) == []
+    # empty plan: no bookkeeping, no events
+    assert FaultInjector(FaultPlan()).fleet_events(0) == []
+
+
+# ---------------------------------------------------------------------------
+# Registry batch loader
+# ---------------------------------------------------------------------------
+
+
+def test_load_models_batch_degrades_only_corrupt_pool(tmp_path, capsys):
+    d = str(tmp_path)
+    os.makedirs(d, exist_ok=True)
+    # a fitted gpu-a100 file, then corrupt it: load must fall back to the
+    # analytic seed for THAT device only
+    m = seeds.ANALYTIC_SEEDS["gpu-a100"]()
+    registry.save_model(LinearCostModel(
+        keys=list(m.keys), weights=m.weights.copy(), device="gpu-a100",
+        meta={}), d)
+    corrupt_file(registry._model_path(d, "gpu-a100"), mode="truncate")
+    models = registry.load_models(["gpu-a100", "tpu-v5e", "gpu-a100"], d)
+    assert set(models) == {"gpu-a100", "tpu-v5e"}
+    assert models["gpu-a100"].meta.get("source") == "datasheet-seed"
+    assert models["tpu-v5e"].meta.get("source") == "datasheet-seed"
+    out = capsys.readouterr().out
+    rollups = [l for l in out.splitlines()
+               if l.startswith("[registry]") and "fallbacks=" in l]
+    assert len(rollups) == 1                    # ONE rollup line
+    assert "gpu-a100:seed" in rollups[0]
+    with pytest.raises(registry.UnknownDeviceError):
+        registry.load_models(["gpu-a100", "mystery-chip"], d)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous elastic descriptor
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_int_signature_is_one_pool_case():
+    cfg = ARCHS[_ARCH]
+    a = elastic.replan(cfg, SHAPES["train_4k"], 16)
+    b = elastic.replan(cfg, SHAPES["train_4k"], [(None, 16)])
+    assert [(o.shape, o.predicted_step_s, o.device) for o in a] == \
+        [(o.shape, o.predicted_step_s, o.device) for o in b]
+    assert all(o.device is None for o in a)
+
+
+def test_elastic_heterogeneous_descriptor_merges_pools():
+    cfg = ARCHS[_ARCH]
+    desc = [("gpu-a100", 8), ("tpu-v5e", 8)]
+    opts = elastic.replan(cfg, SHAPES["train_4k"], desc)
+    assert {o.device for o in opts} == {"gpu-a100", "tpu-v5e"}
+    secs = [o.predicted_step_s for o in opts]
+    assert secs == sorted(secs)                 # one merged ranking
+    # per-pool options match the pool scored alone
+    solo = elastic.replan(cfg, SHAPES["train_4k"], [("gpu-a100", 8)])
+    merged = [o for o in opts if o.device == "gpu-a100"]
+    assert [(o.shape, o.predicted_step_s) for o in solo] == \
+        [(o.shape, o.predicted_step_s) for o in merged]
+
+
+def test_elastic_on_failure_pool_descriptor():
+    cfg = ARCHS[_ARCH]
+    # int path unchanged: 256 - 3 lost -> best power-of-two mesh over 128
+    opt = elastic.on_failure(cfg, SHAPES["train_4k"], 256, lost=3)
+    assert int(np.prod(list(opt.shape.values()))) == 128
+    assert opt.device is None
+    # descriptor path: the named pool rounds down, the other keeps its
+    # count, and a dead pool drops out entirely
+    opt = elastic.on_failure(cfg, SHAPES["train_4k"],
+                             [("gpu-a100", 8), ("tpu-v5e", 8)], lost=3,
+                             pool="gpu-a100")
+    assert opt.device in ("gpu-a100", "tpu-v5e")
+    opt = elastic.on_failure(cfg, SHAPES["train_4k"],
+                             [("gpu-a100", 2), ("tpu-v5e", 8)], lost=2,
+                             pool="gpu-a100")
+    assert opt.device == "tpu-v5e"              # a100 pool died
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_deterministic_and_priority_ordered():
+    m = demo_manifest()
+    a1 = FleetAllocator(m).allocate()
+    a2 = FleetAllocator(demo_manifest()).allocate()
+    assert a1.to_json_dict() == a2.to_json_dict()
+    assert set(a1.placements) == {"train-hi", "serve", "train-lo"}
+    assert a1.paused == {}
+    # no pool overcommitted
+    used = {}
+    for p in a1.placements.values():
+        used[p.pool] = used.get(p.pool, 0) + p.devices
+    for pool in m.pools:
+        assert used.get(pool.name, 0) <= pool.count
+    # device-count bounds respected
+    for name, p in a1.placements.items():
+        job = next(j for j in m.jobs if j.name == name)
+        assert job.min_devices <= p.devices <= job.max_devices
+
+
+def test_allocator_pauses_unplaceable_job():
+    m = Manifest(
+        pools=[PoolSpec("a", "gpu-a100", 4)],
+        jobs=[JobSpec(name="big", arch=_ARCH,
+                      workload=WorkloadSpec(phase="train", global_batch=8,
+                                            seq_len=128, name="big"),
+                      priority=9, min_devices=8, max_devices=8),
+              JobSpec(name="ok", arch=_ARCH,
+                      workload=WorkloadSpec(phase="train", global_batch=8,
+                                            seq_len=128, name="ok"),
+                      priority=1, min_devices=1, max_devices=4)])
+    a = FleetAllocator(m).allocate()
+    assert a.paused == {"big": "capacity"}
+    assert a.placements["ok"].devices == 4
+
+
+def test_manifest_json_roundtrip(tmp_path):
+    m = demo_manifest()
+    path = str(tmp_path / "manifest.json")
+    with open(path, "w") as f:
+        json.dump(m.to_json_dict(), f)
+    m2 = load_manifest(path)
+    assert m2.to_json_dict() == m.to_json_dict()
+    with pytest.raises(ValueError):
+        Manifest(pools=[PoolSpec("a", "gpu-a100", 2),
+                        PoolSpec("a", "tpu-v5e", 2)], jobs=[])
+
+
+# ---------------------------------------------------------------------------
+# Fleet churn determinism
+# ---------------------------------------------------------------------------
+
+
+def _run_fleet(manifest, plan_spec, seed, steps=12):
+    allocator = FleetAllocator(manifest)
+    fplan = FaultPlan.parse(plan_spec, seed=seed) if plan_spec \
+        else FaultPlan(seed=seed)
+    sup = FleetSupervisor(allocator, injector=FaultInjector(fplan),
+                          runner_factory=SimJobRunner.factory())
+    sup.run(steps)
+    return sup
+
+
+def test_placement_history_byte_identical():
+    spec = "pool_shrink@3:pool=a100,k=2;pool_grow@8:pool=a100,k=2"
+    s1 = _run_fleet(demo_manifest(), spec, seed=7)
+    s2 = _run_fleet(demo_manifest(), spec, seed=7)
+    assert s1.history_json() == s2.history_json()
+    assert s1.history_json().encode() == s2.history_json().encode()
+
+
+def test_empty_fleet_plan_identical_to_bare_allocator():
+    bare = FleetAllocator(demo_manifest()).allocate()
+    sup = _run_fleet(demo_manifest(), None, seed=7)
+    assert sup.assignment.to_json_dict() == bare.to_json_dict()
+    assert sup.actions == {}
+    assert len(sup.placement_history) == 2      # allocate + final only
+    # every sim runner ticked every step under its original placement
+    for name, p in bare.placements.items():
+        hist = sup.runners[name].history
+        assert len(hist) == 12
+        assert all(h["pool"] == p.pool and h["devices"] == p.devices
+                   for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_shrink_replans_and_migrates_without_losing_jobs():
+    sup = _run_fleet(demo_manifest(), "pool_shrink@5:pool=a100,k=2",
+                     seed=7)
+    # nobody lost: all three jobs still active, none paused
+    assert len(sup.assignment.placements) == 3
+    assert sup.assignment.paused == {}
+    assert sup.actions.get("migrate", 0) >= 1
+    # the churned pool fits its shrunken capacity
+    assert sup.used("a100") <= sup.capacity["a100"] == 6
+
+
+def test_ladder_pause_then_resume_on_grow():
+    jobs = [JobSpec(name=n, arch=_ARCH,
+                    workload=WorkloadSpec(phase="train", global_batch=8,
+                                          seq_len=128, name=n),
+                    priority=pri, min_devices=4, max_devices=4)
+            for n, pri in (("hi", 10), ("lo", 1))]
+    m = Manifest(pools=[PoolSpec("a", "gpu-a100", 8)], jobs=jobs)
+    allocator = FleetAllocator(m)
+    fplan = FaultPlan.parse("pool_shrink@2:pool=a,k=4;"
+                            "pool_grow@6:pool=a,k=4", seed=0)
+    sup = FleetSupervisor(allocator, injector=FaultInjector(fplan),
+                          runner_factory=SimJobRunner.factory())
+    sup.run(10)
+    # shrink to 4: hi keeps 4, lo has nowhere to go -> paused with a
+    # retry-after stamp; grow restores capacity -> lo resumes
+    assert sup.actions.get("pause") == 1
+    assert sup.actions.get("resume") == 1
+    assert set(sup.assignment.placements) == {"hi", "lo"}
+    events = [e["event"] for e in sup.placement_history]
+    assert "pool_shrink:a" in events and "pool_grow:a" in events
+
+
+def test_ladder_shrinks_lower_priority_to_make_room():
+    wl4 = lambda n: WorkloadSpec(phase="train", global_batch=8,
+                                 seq_len=128, name=n)
+    m = Manifest(
+        pools=[PoolSpec("a", "gpu-a100", 8), PoolSpec("b", "tpu-v5e", 4)],
+        jobs=[JobSpec(name="hi", arch=_ARCH, workload=wl4("hi"),
+                      priority=10, min_devices=4, max_devices=4),
+              JobSpec(name="mid", arch=_ARCH, workload=wl4("mid"),
+                      priority=8, min_devices=2, max_devices=4),
+              JobSpec(name="lo", arch=_ARCH, workload=wl4("lo"),
+                      priority=1, min_devices=2, max_devices=4)])
+    allocator = FleetAllocator(m)
+    a = allocator.allocate()
+    assert a.placements["hi"].pool == "a"
+    assert a.placements["mid"].pool == "a"
+    assert a.placements["lo"].pool == "b"
+    sup = FleetSupervisor(allocator, assignment=a,
+                          injector=FaultInjector(
+                              FaultPlan.parse("pool_shrink@2:pool=a,k=4",
+                                              seed=0)),
+                          runner_factory=SimJobRunner.factory())
+    sup.run(6)
+    # mid displaced from a; b full -> lo shrinks 4->2 to make room
+    assert sup.actions.get("shrink", 0) >= 1
+    assert sup.actions.get("migrate", 0) >= 1
+    assert sup.assignment.placements["mid"].pool == "b"
+    assert sup.assignment.placements["lo"].devices == 2
+    assert sup.assignment.paused == {}
+
+
+def test_rebalance_hysteresis_blocks_thrash():
+    job = JobSpec(name="j", arch=_ARCH,
+                  workload=WorkloadSpec(phase="train", global_batch=8,
+                                        seq_len=128, name="j"),
+                  priority=5, min_devices=2, max_devices=4)
+    # two pools of the SAME device type: a grow offers zero predicted
+    # win, so hysteresis must block any voluntary move
+    m = Manifest(pools=[PoolSpec("a", "gpu-a100", 4),
+                        PoolSpec("b", "gpu-a100", 0)], jobs=[job])
+    allocator = FleetAllocator(m)
+    sup = FleetSupervisor(allocator,
+                          injector=FaultInjector(FaultPlan.parse(
+                              "pool_grow@2:pool=b,k=4", seed=0)),
+                          runner_factory=SimJobRunner.factory())
+    sup.run(6)
+    assert sup.actions.get("rebalance", 0) == 0
+    assert sup.assignment.placements["j"].pool == "a"
+
+
+def test_rebalance_fires_above_hysteresis_once_per_cooldown():
+    job = JobSpec(name="j", arch=_ARCH,
+                  workload=WorkloadSpec(phase="train", global_batch=8,
+                                        seq_len=128, name="j"),
+                  priority=5, min_devices=2, max_devices=4)
+    # v5e -> h100 is far beyond the 15% hysteresis: ONE rebalance fires;
+    # the second grow lands inside the cooldown window and must not move
+    # the job again
+    m = Manifest(pools=[PoolSpec("slow", "tpu-v5e", 4),
+                        PoolSpec("fast", "gpu-h100", 0)], jobs=[job])
+    allocator = FleetAllocator(m)
+    sup = FleetSupervisor(allocator,
+                          injector=FaultInjector(FaultPlan.parse(
+                              "pool_grow@2:pool=fast,k=4;"
+                              "pool_grow@3:pool=fast,k=4", seed=0)),
+                          runner_factory=SimJobRunner.factory(),
+                          cooldown_steps=3)
+    sup.run(6)
+    assert sup.actions.get("rebalance", 0) == 1
+    assert sup.assignment.placements["j"].pool == "fast"
+
+
+# ---------------------------------------------------------------------------
+# Migration resume ≡ fault-free (real reduced trainers)
+# ---------------------------------------------------------------------------
+
+_TOTAL = 14
+
+
+def _trainer_cfgs(ckpt_dir):
+    cfg = ARCHS[_ARCH].reduced()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4,
+                    seed=5)
+    tc = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=5,
+                       total_steps=_TOTAL, seed=0, log_every=1000,
+                       save_on_exit=False)
+    return cfg, dc, tc
+
+
+def test_migration_resume_matches_fault_free_history(tmp_path):
+    # fault-free reference
+    ref_ck = str(tmp_path / "ref-ckpt")
+    cfg, dc, tc = _trainer_cfgs(ref_ck)
+    reference = Trainer(cfg, dc, tc).train(_TOTAL)
+
+    # a 1-job fleet on two pools; shrink the job's pool to zero at step 9
+    # -> forced migration mid-interval (last checkpoint: step 5)
+    job = JobSpec(name="j", arch=_ARCH,
+                  workload=WorkloadSpec(phase="train", global_batch=4,
+                                        seq_len=64, name="j"),
+                  priority=5, min_devices=2, max_devices=2)
+    m = Manifest(pools=[PoolSpec("a100", "gpu-a100", 2),
+                        PoolSpec("v5e", "tpu-v5e", 2)], jobs=[job])
+    allocator = FleetAllocator(m)
+    assignment = allocator.allocate()
+    home = assignment.placements["j"].pool
+
+    ck = str(tmp_path / "fleet-ckpt")
+    fcfg, fdc, ftc = _trainer_cfgs(ck)
+
+    def trainer_factory(job_spec, placement):
+        return Trainer(fcfg, fdc, ftc)
+
+    fplan = FaultPlan.parse(f"pool_shrink@9:pool={home},k=2", seed=7)
+    sup = FleetSupervisor(
+        allocator, assignment=assignment,
+        injector=FaultInjector(fplan),
+        runner_factory=TrainerJobRunner.factory(trainer_factory,
+                                                target=_TOTAL))
+    sup.run(_TOTAL)
+
+    assert sup.actions.get("migrate") == 1
+    other = {"a100": "v5e", "v5e": "a100"}[home]
+    assert sup.assignment.placements["j"].pool == other
+    runner = sup.runners["j"]
+    assert runner.done and int(runner.trainer.step) >= _TOTAL
+
+    hist = runner.history
+    assert [h["step"] for h in hist] == \
+        [h["step"] for h in reference]
+    for h, r in zip(hist, reference):
+        np.testing.assert_allclose(h["loss"], r["loss"], rtol=1e-5)
+        np.testing.assert_allclose(h["grad_norm"], r["grad_norm"],
+                                   rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# CLI dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_launch_fleet_cli_smoke(tmp_path, capsys):
+    from repro.launch.__main__ import main as launch_main
+    hist = str(tmp_path / "hist.json")
+    launch_main(["fleet", "--steps", "8",
+                 "--fault-plan", "pool_shrink@2:pool=a100,k=2",
+                 "--chaos-seed", "7", "--history-json", hist])
+    out = capsys.readouterr().out
+    assert "[fleet]" in out
+    assert "replanned" in out
+    assert "migrated" in out
+    assert "run complete" in out
+    entries = json.loads(open(hist).read())
+    assert [e["event"] for e in entries] == \
+        ["allocate", "pool_shrink:a100", "final"]
+
+
+def test_launch_dispatch_rejects_unknown():
+    from repro.launch.__main__ import main as launch_main
+    with pytest.raises(SystemExit):
+        launch_main(["frobnicate"])
